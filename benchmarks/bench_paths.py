@@ -1,0 +1,35 @@
+"""Paper §2.4 + [5] (heterogeneous data-movement paths): the TPU
+analogue of GPUDirect vs copy-to-CPU path selection — direct flat
+collectives over the full 512-chip mesh vs two-level (ICI-aggregate,
+one DCN hop, ICI-distribute) staged paths, across message sizes.
+
+Output: the crossover table the selector's alpha-beta model induces —
+small messages prefer fewer hops (log-step flat), large messages prefer
+the staged path that minimizes DCN bytes."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import selector
+from repro.core.topology import Topology
+
+TOPO = Topology(nranks=512, ranks_per_pod=256)
+
+
+def main():
+    for coll in ("allgather", "allreduce", "alltoall"):
+        for nbytes in (2**10, 2**14, 2**18, 2**22, 2**26):
+            times = selector.modeled_times(coll, TOPO, nbytes)
+            best = min(times, key=times.get)
+            for name, t in sorted(times.items()):
+                emit("paths", f"{coll}.{name}", round(t * 1e6, 2), "us",
+                     f"size={nbytes}B")
+            emit("paths", f"{coll}.best", best, "", f"size={nbytes}B")
+        # the model-driven selector picks a staged (hierarchical-family)
+        # algorithm at bandwidth sizes
+        assert selector.select(coll, TOPO,
+                               2**26).startswith("hierarchical"), coll
+    emit("paths", "claims.selector_prefers_staged_large", 1)
+
+
+if __name__ == "__main__":
+    main()

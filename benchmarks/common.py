@@ -1,0 +1,14 @@
+"""Shared benchmark helpers: CSV row emission."""
+from __future__ import annotations
+
+ROWS = []
+
+
+def emit(bench: str, name: str, value, unit: str = "", note: str = ""):
+    row = (bench, name, value, unit, note)
+    ROWS.append(row)
+    print(f"{bench},{name},{value},{unit},{note}")
+
+
+def header():
+    print("bench,name,value,unit,note")

@@ -1,0 +1,29 @@
+"""Run every benchmark (one per paper pillar/table); CSV on stdout.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import header
+from benchmarks import (bench_allgather, bench_alltoall, bench_neighbor,
+                        bench_partitioned, bench_paths,
+                        bench_moe_dispatch)
+
+BENCHES = [bench_allgather, bench_alltoall, bench_neighbor,
+           bench_partitioned, bench_paths, bench_moe_dispatch]
+
+
+def main() -> None:
+    header()
+    t0 = time.time()
+    for mod in BENCHES:
+        mod.main()
+    print(f"# {len(BENCHES)} benchmarks OK in {time.time()-t0:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

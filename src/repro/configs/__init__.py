@@ -1,0 +1,31 @@
+"""Assigned-architecture registry: ``get_config(arch)`` / ``get_smoke(arch)``.
+
+One module per architecture (the assignment's exact published numbers);
+``SMOKE`` variants are hand-reduced same-family configs for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "gemma2-2b", "gemma-2b", "qwen3-14b", "smollm-360m",
+    "deepseek-v3-671b", "moonshot-v1-16b-a3b", "rwkv6-3b",
+    "whisper-small", "qwen2-vl-7b", "jamba-1.5-large-398b",
+]
+
+
+def _module(arch: str):
+    return importlib.import_module(
+        "repro.configs." + arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    return _module(arch).config()
+
+
+def get_smoke(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    return _module(arch).smoke()

@@ -1,0 +1,37 @@
+"""deepseek-v3-671b [moe]: 61L d_model=7168 128H d_ff(dense)=18432,
+MoE 256e top-8 + 1 shared (d_expert=2048), MLA (q_lora 1536, kv_lora 512,
+nope 128 + rope 64, v 128), sigmoid router scale 2.5, vocab=129280,
+first 3 layers dense.  MTP head omitted (see DESIGN.md).
+[arXiv:2412.19437]"""
+from repro.models.config import (BlockSpec, MLAConfig, ModelConfig,
+                                 MoEConfig)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b",
+        d_model=7168, vocab_size=129280, d_ff=18432,
+        prefix=(BlockSpec("mla", "mlp"),) * 3,
+        period=(BlockSpec("mla", "moe"),), n_periods=58,
+        mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                      qk_nope_head_dim=128, qk_rope_head_dim=64,
+                      v_head_dim=128, n_heads=128, rope_theta=10000.0),
+        moe=MoEConfig(n_experts=256, top_k=8, d_expert=2048, n_shared=1,
+                      router="sigmoid", route_scale=2.5, norm_topk=True),
+        mlp_act="silu", tie_embeddings=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b-smoke",
+        d_model=64, vocab_size=277, d_ff=160,
+        prefix=(BlockSpec("mla", "mlp"),),
+        period=(BlockSpec("mla", "moe"),), n_periods=2,
+        mla=MLAConfig(q_lora_rank=24, kv_lora_rank=16,
+                      qk_nope_head_dim=16, qk_rope_head_dim=8,
+                      v_head_dim=16, n_heads=4, rope_theta=10000.0),
+        moe=MoEConfig(n_experts=8, top_k=2, d_expert=48, n_shared=1,
+                      router="sigmoid", route_scale=2.5, norm_topk=True),
+        mlp_act="silu", tie_embeddings=False,
+    )

@@ -1,0 +1,14 @@
+"""Collective algorithm schedule builders (the MPIX algorithm zoo).
+
+Every builder takes a ``Topology`` and returns a ``Schedule`` executable by
+any ``Transport``.  Registries map (collective, algorithm-name) to builder,
+mirroring MPI Advance's publicly-selectable algorithm tables.
+"""
+from repro.core.algorithms import allgather, allreduce, alltoall, reduce_scatter
+
+REGISTRY = {
+    "allgather": allgather.ALGORITHMS,
+    "allreduce": allreduce.ALGORITHMS,
+    "reduce_scatter": reduce_scatter.ALGORITHMS,
+    "alltoall": alltoall.ALGORITHMS,
+}

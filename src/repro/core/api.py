@@ -1,0 +1,152 @@
+"""MPIX-style user API (paper Listings 2/4): drop-in collectives with a
+publicly selectable ``algorithm=`` argument.
+
+    y = mpix_allreduce(x, ("pod", "data"))                   # default select
+    y = mpix_allreduce(x, ("pod", "data"), algorithm="hierarchical")
+    y = mpix_allgather(x, "model", algorithm="bruck")
+
+All functions must be called *inside* ``shard_map`` whose manual axes
+include ``axis_names``; ``algorithm="xla"`` routes to the substrate
+(XLA's native lowering — the analogue of calling the system MPI), every
+other name routes to a persistent ``Schedule`` executed over ``ppermute``.
+
+Schedules are built once per (collective, algorithm, topology) and cached
+— MPI Advance's "persistent" initialization-time setup.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topology import Topology
+from repro.core.transport import ShardMapTransport, _flat_rank
+from repro.core import selector
+from repro.core.algorithms import REGISTRY
+
+
+def _axes_tuple(axis_names) -> tuple[str, ...]:
+    return (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
+
+
+def topology_from_axes(axis_names: Sequence[str]) -> Topology:
+    """Topology for the flat rank space of ``axis_names`` (row-major).
+
+    Convention: if the first axis is named ``"pod"`` it is the DCN axis and
+    everything after it is intra-pod; otherwise the whole space is one pod.
+    Must be called inside shard_map (uses static axis sizes).
+    """
+    names = _axes_tuple(axis_names)
+    sizes = [jax.lax.axis_size(n) for n in names]
+    nranks = 1
+    for s in sizes:
+        nranks *= s
+    if names[0] == "pod" and len(names) > 1:
+        return Topology(nranks=nranks, ranks_per_pod=nranks // sizes[0])
+    return Topology(nranks=nranks, ranks_per_pod=nranks)
+
+
+@functools.lru_cache(maxsize=None)
+def _schedule(collective: str, algorithm: str, nranks: int,
+              ranks_per_pod: int):
+    topo = Topology(nranks=nranks, ranks_per_pod=ranks_per_pod)
+    return REGISTRY[collective][algorithm](topo)
+
+
+def _resolve(collective: str, algorithm: str, topo: Topology, nbytes: int):
+    if algorithm == "auto":
+        algorithm = selector.select(collective, topo, nbytes)
+    if algorithm == "xla":
+        return "xla", None
+    return algorithm, _schedule(collective, algorithm, topo.nranks,
+                                topo.ranks_per_pod)
+
+
+def _pad_to(x: jax.Array, mult: int):
+    flat = x.reshape(-1)
+    rem = (-flat.size) % mult
+    if rem:
+        flat = jnp.concatenate([flat, jnp.zeros((rem,), x.dtype)])
+    return flat
+
+
+# ---------------------------------------------------------------------------
+
+
+def mpix_allgather(x: jax.Array, axis_names, *, algorithm: str = "auto",
+                   topo: Topology | None = None) -> jax.Array:
+    """Tiled allgather of the local shard along its leading dim."""
+    names = _axes_tuple(axis_names)
+    topo = topo or topology_from_axes(names)
+    algorithm, sched = _resolve("allgather", algorithm, topo,
+                                x.size * x.dtype.itemsize)
+    if algorithm == "xla":
+        return jax.lax.all_gather(x, names, tiled=True)
+    n = topo.nranks
+    buf = jnp.zeros((n,) + x.shape, x.dtype)
+    buf = buf.at[_flat_rank(names)].set(x)
+    out = ShardMapTransport(n, names).run(sched, buf)
+    return out.reshape((n * x.shape[0],) + x.shape[1:])
+
+
+def mpix_allreduce(x: jax.Array, axis_names, *, algorithm: str = "auto",
+                   topo: Topology | None = None) -> jax.Array:
+    names = _axes_tuple(axis_names)
+    topo = topo or topology_from_axes(names)
+    algorithm, sched = _resolve("allreduce", algorithm, topo,
+                                x.size * x.dtype.itemsize)
+    if algorithm == "xla":
+        return jax.lax.psum(x, names)
+    n = topo.nranks
+    flat = _pad_to(x, n)
+    out = ShardMapTransport(n, names).run(sched, flat.reshape(n, -1))
+    return out.reshape(-1)[: x.size].reshape(x.shape)
+
+
+def mpix_reduce_scatter(x: jax.Array, axis_names, *,
+                        algorithm: str = "auto",
+                        topo: Topology | None = None) -> jax.Array:
+    """Reduce along axes; scatter over the leading dim (must divide)."""
+    names = _axes_tuple(axis_names)
+    topo = topo or topology_from_axes(names)
+    algorithm, sched = _resolve("reduce_scatter", algorithm, topo,
+                                x.size * x.dtype.itemsize)
+    if algorithm == "xla":
+        return jax.lax.psum_scatter(x, names, scatter_dimension=0,
+                                    tiled=True)
+    n = topo.nranks
+    assert x.shape[0] % n == 0, (x.shape, n)
+    blocks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    out = ShardMapTransport(n, names).run(sched, blocks)
+    return out[_flat_rank(names)]
+
+
+def mpix_alltoall(x: jax.Array, axis_names, *, algorithm: str = "auto",
+                  topo: Topology | None = None) -> jax.Array:
+    """Alltoall over the leading dim: in block d = data for rank d;
+    out block s = data from rank s.  Leading dim must divide by nranks."""
+    names = _axes_tuple(axis_names)
+    topo = topo or topology_from_axes(names)
+    algorithm, sched = _resolve("alltoall", algorithm, topo,
+                                x.size * x.dtype.itemsize)
+    n = topo.nranks
+    assert x.shape[0] % n == 0, (x.shape, n)
+    if algorithm == "xla":
+        # tiled alltoall: leading dim split into n segments; segment s of
+        # the output came from rank s.
+        return jax.lax.all_to_all(x, names, split_axis=0, concat_axis=0,
+                                  tiled=True)
+    blocks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    if sched.num_blocks > n:  # schedules with a separate recv region
+        pad = jnp.zeros((sched.num_blocks - n,) + blocks.shape[1:], x.dtype)
+        blocks = jnp.concatenate([blocks, pad], axis=0)
+    out = ShardMapTransport(n, names).run(sched, blocks)
+    return out[: sched.result_blocks].reshape(x.shape)
+
+
+__all__ = [
+    "mpix_allgather", "mpix_allreduce", "mpix_reduce_scatter",
+    "mpix_alltoall", "topology_from_axes",
+]

@@ -1,0 +1,166 @@
+"""Static communication schedules — the "persistent plan" core of the MPIX layer.
+
+MPI Advance hoists all collective setup into a one-time initialization
+(persistent collectives, MPI-4).  In JAX the same split is natural and
+*mandatory*: ``jax.lax.ppermute`` requires a static permutation, so every
+collective algorithm here compiles — once, in Python, at plan time — to a
+``Schedule``: a list of ``Round``s, each a static set of (src, dst) pairs
+plus per-rank block index tables describing which blocks of the local
+buffer are sent and where received blocks land.
+
+The same ``Schedule`` is executed by two backends (see transport.py):
+
+  * ``SimTransport``    — numpy rank-by-rank simulator; exact message/byte
+                          accounting against a ``Topology`` (unit tests,
+                          benchmarks, the alpha-beta cost model).
+  * ``ShardMapTransport`` — the real SPMD executor: ``ppermute`` + gather/
+                          scatter-by-``axis_index`` inside ``shard_map``.
+
+Buffers are *block-indexed*: shape ``[num_blocks, block...]``.  Collectives
+move whole blocks; ragged (v-variant) payloads are padded to the max block
+and true byte counts are carried in the schedule for accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class Round:
+    """One communication round.
+
+    perm:        static list of (src, dst) rank pairs (a partial matching in
+                 rank space — each src sends once, each dst receives once).
+    send_blocks: int array [nranks, k]; row r = block indices rank r sends
+                 this round (-1 entries send a zero/dummy block).
+    recv_blocks: int array [nranks, k]; row r = destination block slots for
+                 what rank r receives (-1 entries are dropped).
+    reduce:      if True received blocks are added into the buffer,
+                 otherwise they overwrite.
+    """
+
+    perm: tuple[tuple[int, int], ...]
+    send_blocks: np.ndarray
+    recv_blocks: np.ndarray
+    reduce: bool = False
+
+    def __post_init__(self):
+        assert self.send_blocks.shape == self.recv_blocks.shape
+        srcs = [s for s, _ in self.perm]
+        dsts = [d for _, d in self.perm]
+        assert len(set(srcs)) == len(srcs), "duplicate src in perm"
+        assert len(set(dsts)) == len(dsts), "duplicate dst in perm"
+        # Non-destination ranks must carry an all -1 recv row, so that the
+        # numpy simulator and the ppermute executor agree bit-for-bit
+        # (ppermute hands zeros to non-destinations; the -1 row routes those
+        # zeros to the scratch slot instead of clobbering real blocks).
+        dst_set = set(dsts)
+        for r in range(self.recv_blocks.shape[0]):
+            if r not in dst_set:
+                assert (self.recv_blocks[r] < 0).all(), (
+                    f"rank {r} is not a destination this round but has a "
+                    f"live recv row {self.recv_blocks[r]}")
+        # A destination's live recv slots must be distinct (scatter safety).
+        for _, d in self.perm:
+            live = self.recv_blocks[d][self.recv_blocks[d] >= 0]
+            assert len(set(live.tolist())) == len(live), (
+                f"rank {d} has duplicate recv slots {live}")
+
+    @property
+    def k(self) -> int:
+        return self.send_blocks.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A compiled collective: rounds + buffer geometry.
+
+    num_blocks:  leading axis of the working buffer.
+    block_bytes: optional per-block true byte counts [num_blocks] for
+                 ragged payloads (accounting only; execution is padded).
+    local_pre:   optional [nranks, num_blocks] slot permutation applied
+                 before round 0 (new_buf[s] = buf[local_pre[r, s]]); free —
+                 a local shuffle, no messages (Bruck rotation phase).
+    local_post:  same, applied after the last round.
+    out_blocks:  number of leading blocks that constitute the result after
+                 local_post (schedules with separate send/recv regions set
+                 this < num_blocks, like MPI send/recv buffer pairs).
+    """
+
+    nranks: int
+    num_blocks: int
+    rounds: tuple[Round, ...]
+    name: str = "schedule"
+    block_bytes: np.ndarray | None = None
+    local_pre: np.ndarray | None = None
+    local_post: np.ndarray | None = None
+    out_blocks: int | None = None
+
+    @property
+    def result_blocks(self) -> int:
+        return self.num_blocks if self.out_blocks is None else self.out_blocks
+
+    # -- accounting (validates the paper's message/byte-count claims) ------
+    def message_count(self, topo: Topology | None = None,
+                      local: bool | None = None) -> int:
+        """Total point-to-point messages; filter by link class if asked."""
+        n = 0
+        for rnd in self.rounds:
+            for s, d in rnd.perm:
+                if topo is not None and local is not None:
+                    if topo.is_local(s, d) != local:
+                        continue
+                n += 1
+        return n
+
+    def byte_count(self, elem_bytes: int, topo: Topology | None = None,
+                   local: bool | None = None) -> int:
+        """Total bytes moved (true counts if block_bytes set)."""
+        total = 0
+        for rnd in self.rounds:
+            for i, (s, d) in enumerate(rnd.perm):
+                if topo is not None and local is not None:
+                    if topo.is_local(s, d) != local:
+                        continue
+                blocks = rnd.send_blocks[s]
+                for b in blocks:
+                    if b < 0:
+                        continue
+                    if self.block_bytes is not None:
+                        total += int(self.block_bytes[b])
+                    else:
+                        total += elem_bytes
+        return total
+
+    def modeled_time(self, topo: Topology, block_nbytes: int) -> float:
+        """alpha-beta model: rounds serialize, edges within a round overlap."""
+        return sum(topo.round_time(r.perm, block_nbytes * r.k)
+                   for r in self.rounds)
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+
+def make_round(nranks: int,
+               edges: Sequence[tuple[int, int]],
+               send_blocks: dict[int, Sequence[int]],
+               recv_blocks: dict[int, Sequence[int]],
+               reduce: bool = False) -> Round:
+    """Build a Round from per-rank block lists (ragged -> padded with -1)."""
+    k = max((len(v) for v in send_blocks.values()), default=0)
+    k = max(k, max((len(v) for v in recv_blocks.values()), default=0))
+    k = max(k, 1)
+    sb = np.full((nranks, k), -1, dtype=np.int32)
+    rb = np.full((nranks, k), -1, dtype=np.int32)
+    for r, blocks in send_blocks.items():
+        sb[r, : len(blocks)] = blocks
+    for r, blocks in recv_blocks.items():
+        rb[r, : len(blocks)] = blocks
+    return Round(perm=tuple((int(s), int(d)) for s, d in edges),
+                 send_blocks=sb, recv_blocks=rb, reduce=reduce)

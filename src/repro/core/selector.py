@@ -1,0 +1,82 @@
+"""Default algorithm selection (paper §2.1).
+
+MPI Advance currently ships a fixed default per collective and lists a
+"more sophisticated selection process" as future work.  We implement both:
+
+  * ``select(..., policy="fixed")``   — the paper-faithful static default.
+  * ``select(..., policy="model")``   — alpha-beta-model-driven argmin over
+    every registered schedule (the future-work selector), using the exact
+    per-round link accounting of ``Schedule.modeled_time``.
+
+The selection is made at trace time (static shapes), so it costs nothing
+at run time — the chosen schedule is baked into the compiled program,
+exactly like a persistent MPI Advance collective.
+"""
+from __future__ import annotations
+
+import functools
+
+from repro.core.topology import Topology
+
+# Paper-faithful fixed defaults: log-step algorithms for small payloads
+# would need runtime dispatch; statically we default to the
+# bandwidth-optimal variant per collective, hierarchical when multi-pod.
+_FIXED = {
+    "allgather": ("ring", "hierarchical"),
+    "allreduce": ("ring_rs_ag", "hierarchical"),
+    "reduce_scatter": ("ring", "hierarchical"),
+    "alltoall": ("pairwise", "hierarchical"),
+}
+
+# Below this many bytes per rank, latency dominates: prefer log-step.
+_SMALL = 64 * 1024
+_LOG_STEP = {
+    "allgather": "bruck",
+    "allreduce": "recursive_halving_doubling",
+    "reduce_scatter": "recursive_halving",
+    "alltoall": "bruck",
+}
+
+
+def select(collective: str, topo: Topology, nbytes: int,
+           policy: str = "model") -> str:
+    if policy == "fixed":
+        flat, hier = _FIXED[collective]
+        return hier if topo.npods > 1 else flat
+    return _model_select(collective, topo.nranks, topo.ranks_per_pod,
+                         int(nbytes))
+
+
+@functools.lru_cache(maxsize=None)
+def _model_select(collective: str, nranks: int, ranks_per_pod: int,
+                  nbytes: int) -> str:
+    from repro.core.algorithms import REGISTRY  # local: avoid import cycle
+
+    topo = Topology(nranks=nranks, ranks_per_pod=ranks_per_pod)
+    best_name, best_t = None, float("inf")
+    for name, builder in REGISTRY[collective].items():
+        try:
+            sched = builder(topo)
+        except AssertionError:  # e.g. power-of-2-only algorithms
+            continue
+        block_nbytes = max(1, nbytes // max(1, sched.num_blocks))
+        t = sched.modeled_time(topo, block_nbytes)
+        if t < best_t:
+            best_name, best_t = name, t
+    assert best_name is not None
+    return best_name
+
+
+def modeled_times(collective: str, topo: Topology, nbytes: int) -> dict:
+    """All candidates' modeled times (for benchmarks / reports)."""
+    from repro.core.algorithms import REGISTRY
+
+    out = {}
+    for name, builder in REGISTRY[collective].items():
+        try:
+            sched = builder(topo)
+        except AssertionError:
+            continue
+        out[name] = sched.modeled_time(
+            topo, max(1, nbytes // max(1, sched.num_blocks)))
+    return out

@@ -1,0 +1,108 @@
+"""Topology model for the MPIX layer.
+
+MPI Advance's locality-aware algorithms distinguish intra-node from
+inter-node links.  The TPU analogue distinguishes:
+
+  * ICI  — intra-pod links (2D/3D torus inside a v5e pod), ~50 GB/s/link
+  * DCN  — inter-pod links (data-center network), ~25 GB/s effective
+
+``Topology`` maps a flat rank id (position along one mesh axis, or the
+flattened product of several axes) to a (pod, local) coordinate and
+classifies each (src, dst) pair.  It also carries the alpha-beta (postal)
+link model used by the selector and the path benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+# Hardware constants (TPU v5e target; see EXPERIMENTS.md).
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+DCN_BW = 25e9                   # bytes/s per pod-pair (effective)
+ICI_LATENCY = 1e-6              # alpha, seconds per message
+DCN_LATENCY = 10e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """alpha-beta postal model for one link class."""
+
+    alpha: float  # latency per message (s)
+    beta: float   # seconds per byte (1 / bandwidth)
+
+    def time(self, nbytes: float, nmsgs: int = 1) -> float:
+        return nmsgs * self.alpha + nbytes * self.beta
+
+
+ICI_LINK = LinkModel(alpha=ICI_LATENCY, beta=1.0 / ICI_BW)
+DCN_LINK = LinkModel(alpha=DCN_LATENCY, beta=1.0 / DCN_BW)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Locality structure of ``nranks`` ranks grouped into equal pods.
+
+    ranks_per_pod == nranks  -> single-pod (all links ICI).
+    """
+
+    nranks: int
+    ranks_per_pod: int
+
+    def __post_init__(self):
+        if self.nranks <= 0:
+            raise ValueError("nranks must be positive")
+        if self.ranks_per_pod <= 0 or self.nranks % self.ranks_per_pod:
+            raise ValueError(
+                f"nranks={self.nranks} not divisible by "
+                f"ranks_per_pod={self.ranks_per_pod}")
+
+    # -- coordinates ------------------------------------------------------
+    @property
+    def npods(self) -> int:
+        return self.nranks // self.ranks_per_pod
+
+    def pod(self, rank: int) -> int:
+        return rank // self.ranks_per_pod
+
+    def local(self, rank: int) -> int:
+        return rank % self.ranks_per_pod
+
+    def rank(self, pod: int, local: int) -> int:
+        return pod * self.ranks_per_pod + local
+
+    def pod_ranks(self, pod: int) -> range:
+        base = pod * self.ranks_per_pod
+        return range(base, base + self.ranks_per_pod)
+
+    # -- link classification ----------------------------------------------
+    def is_local(self, src: int, dst: int) -> bool:
+        """True when (src, dst) stay inside one pod (ICI link)."""
+        return self.pod(src) == self.pod(dst)
+
+    def link(self, src: int, dst: int) -> LinkModel:
+        return ICI_LINK if self.is_local(src, dst) else DCN_LINK
+
+    # -- cost model ---------------------------------------------------------
+    def round_time(self, edges: Sequence[tuple[int, int]], nbytes: int) -> float:
+        """Model one schedule round: all edges fire concurrently; the round
+        costs the max over links, with per-link serialization of multiple
+        messages sharing the same directed link class at one src."""
+        if not edges:
+            return 0.0
+        # messages per (src, class) serialize on the src's injection port
+        per_port: dict[tuple[int, bool], int] = {}
+        for s, d in edges:
+            key = (s, self.is_local(s, d))
+            per_port[key] = per_port.get(key, 0) + 1
+        worst = 0.0
+        for (s, local_), n in per_port.items():
+            lm = ICI_LINK if local_ else DCN_LINK
+            worst = max(worst, lm.time(nbytes * n, nmsgs=n))
+        return worst
+
+
+def flat_topology(nranks: int) -> Topology:
+    return Topology(nranks=nranks, ranks_per_pod=nranks)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(xc, dt, Bc, Cc, A, D, h0=None):
+    """xc, dt: [B, T, Di]; Bc, Cc: [B, T, S]; A: [Di, S]; D: [Di].
+    Returns y [B, T, Di] f32 and final h [B, Di, S]."""
+    B_, T, Di = xc.shape
+    S = Bc.shape[-1]
+    h = (jnp.zeros((B_, Di, S), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[..., None].astype(jnp.float32) * A)
+        dBx = (dt_t * x_t).astype(jnp.float32)[..., None] \
+            * b_t.astype(jnp.float32)[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, c_t.astype(jnp.float32))
+        return h, y + D * x_t.astype(jnp.float32)
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, dt, Bc, Cc))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h

@@ -1,0 +1,43 @@
+"""Pallas TPU fused rmsnorm: one HBM pass per row block.
+
+Unfused XLA lowers rmsnorm as square -> reduce -> rsqrt -> mul -> mul
+with an intermediate round-trip when fusion breaks across the reduce;
+the kernel keeps the [br, d] tile in VMEM, does the row reduction and
+both multiplies in-register, and writes once.  Rows are blocked on the
+grid; d stays whole (lane-dim aligned when d % 128 == 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps, gemma_style):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = s_ref[...].astype(jnp.float32)
+    if gemma_style:
+        w = 1.0 + w
+    o_ref[...] = (y * w).astype(o_ref.dtype)
+
+
+def rmsnorm_2d(x, scale, *, eps=1e-6, gemma_style=False, block_rows=256,
+               interpret=False):
+    """x [R, d], scale [d] -> [R, d]."""
+    R, d = x.shape
+    br = min(block_rows, R)
+    assert R % br == 0, (R, br)
+    kern = functools.partial(_kernel, eps=eps, gemma_style=gemma_style)
+    return pl.pallas_call(
+        kern,
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

@@ -1,0 +1,43 @@
+"""jit'd public wrapper for the fused rmsnorm kernel (any leading
+shape; custom VJP via reference recompute; interpret mode on CPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_2d
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _on_cpu():
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rmsnorm(x, scale, eps=1e-6, gemma_style=False):
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    # pick a row block that divides (rows are a product of batch dims)
+    R = flat.shape[0]
+    br = 256
+    while R % br:
+        br //= 2
+    out = rmsnorm_2d(flat, scale, eps=eps, gemma_style=gemma_style,
+                     block_rows=max(br, 1), interpret=_on_cpu())
+    return out.reshape(shape)
+
+
+def _fwd(x, scale, eps, gemma_style):
+    return rmsnorm(x, scale, eps, gemma_style), (x, scale)
+
+
+def _bwd(eps, gemma_style, res, g):
+    x, scale = res
+    _, vjp = jax.vjp(lambda x_, s_: rmsnorm_ref(x_, s_, eps=eps,
+                                                gemma_style=gemma_style),
+                     x, scale)
+    return vjp(g)
+
+
+rmsnorm.defvjp(_fwd, _bwd)

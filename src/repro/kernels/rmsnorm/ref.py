@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused rmsnorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, *, eps=1e-6, gemma_style=False):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if gemma_style \
+        else scale.astype(jnp.float32)
+    return (y * w).astype(x.dtype)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the wkv6 kernel: the O(T) scan recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """r,k,v,w [B,T,H,N]; u [H,N] -> y [B,T,H,N] (f32), final S."""
+    B, T, H, N = r.shape
+    s = (jnp.zeros((B, H, N, N), jnp.float32) if s0 is None
+         else s0.astype(jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhn,bhnm->bhm", rt,
+                       s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+               for t in (r, k, v, w))
+    s, ys = jax.lax.scan(step, s, xs)
+    return jnp.moveaxis(ys, 0, 1), s

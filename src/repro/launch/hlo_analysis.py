@@ -1,0 +1,299 @@
+"""HLO-text analysis: FLOPs, HBM bytes and collective wire bytes with
+*while-loop trip-count multiplication*.
+
+``compiled.cost_analysis()`` counts a while body once; every assigned
+arch scans its layer stack, so XLA's own numbers understate compute by
+the layer count.  This walker parses the optimized HLO, builds a
+per-computation symbol table, and accumulates
+
+  * flops           — dot/convolution ops (2 * prod(result) * K),
+  * hbm_bytes       — operand+result bytes of scheduled ops (fusion
+                      boundaries = actual HBM round-trips),
+  * collectives     — per-kind wire bytes with group-size factors,
+
+multiplying nested computations by their call-site trip counts
+(``backend_config={"known_trip_count":{"n":...}}``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+
+
+def _parse_op_line(line: str):
+    """-> (name, result_type, op_kind) or None.  Handles tuple result
+    types containing ``/*index=N*/`` comments by balancing parens."""
+    m = _NAME_RE.match(line)
+    if m is None:
+        return None
+    name = m.group(1)
+    i = m.end()
+    if i >= len(line):
+        return None
+    if line[i] == "(":          # tuple type: scan to balanced close
+        depth, j = 1, i + 1
+        while j < len(line) and depth:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+            j += 1
+        rtype = line[i:j]
+        rest = line[j:].lstrip()
+    else:
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        rtype = line[i:j]
+        rest = line[j:].lstrip()
+    km = re.match(r"([\w\-]+)\(", rest)
+    if km is None:
+        return None
+    return name, rtype, km.group(1)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+             "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+             "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# data-movement-free ops excluded from HBM byte accounting
+_NO_BYTES = {"tuple", "get-tuple-element", "bitcast", "parameter",
+             "constant", "after-all", "add-dependency", "while",
+             "conditional", "call"}
+
+# Ops a TPU compiler would fuse into neighbours: the CPU backend leaves
+# them standalone, which would inflate the memory roofline term.  They
+# are skipped from byte accounting under tpu_projection (default).
+_FUSABLE = {"add", "subtract", "multiply", "divide", "power", "tanh",
+            "exponential", "log", "negate", "abs", "maximum", "minimum",
+            "compare", "select", "and", "or", "not", "xor", "convert",
+            "broadcast", "iota", "reshape", "rsqrt", "sqrt", "floor",
+            "ceil", "round-nearest-afz", "round-nearest-even", "clamp",
+            "sign", "cosine", "sine", "atan2", "remainder", "exponential-minus-one",
+            "log-plus-one", "shift-left", "shift-right-logical",
+            "shift-right-arithmetic", "is-finite", "popcnt", "clz",
+            "logistic", "cbrt", "reduce-precision"}
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def _shape_dims(s: str) -> list[list[int]]:
+    return [[int(d) for d in dims.split(",") if d]
+            for _, dims in _SHAPE_RE.findall(s)]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    rtype: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    symbols: dict          # name -> result type string
+
+
+def parse_module(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line or line.lstrip().startswith("//"):
+            continue
+        if line.endswith("{") and "->" in line:
+            m = _COMP_RE.match(line.strip().removesuffix("{").strip())
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                # parameters: "name: type" pairs in the header
+                for pm in re.finditer(r"([\w.\-]+):\s*([\w\[\]{},]+)",
+                                      m.group(2)):
+                    cur.symbols[pm.group(1)] = pm.group(2)
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _parse_op_line(line)
+        if om:
+            name, rtype, kind = om
+            cur.ops.append(Op(name, kind, rtype, line))
+            cur.symbols[name] = rtype
+    return comps
+
+
+def _operands(op: Op):
+    """Operand names inside the op's argument parens."""
+    start = op.line.index(op.kind + "(") + len(op.kind) + 1
+    depth, end = 1, start
+    while end < len(op.line) and depth:
+        if op.line[end] == "(":
+            depth += 1
+        elif op.line[end] == ")":
+            depth -= 1
+        end += 1
+    return _OPERAND_RE.findall(op.line[start:end - 1])
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    dims = _shape_dims(op.rtype)
+    out_elems = 1
+    for d in (dims[0] if dims else []):
+        out_elems *= d
+    k = 1
+    m = _LHS_C_RE.search(op.line)
+    if m:
+        ops_ = _operands(op)
+        if ops_:
+            lhs_t = comp.symbols.get(ops_[0])
+            if lhs_t:
+                lhs_dims = _shape_dims(lhs_t)
+                if lhs_dims:
+                    for idx in (int(x) for x in m.group(1).split(",")
+                                if x):
+                        if idx < len(lhs_dims[0]):
+                            k *= lhs_dims[0][idx]
+    return 2.0 * out_elems * k
+
+
+def _coll_wire(op: Op) -> tuple[str, float]:
+    nbytes = _shape_bytes(op.rtype)
+    g = None
+    m = _GROUPS_IOTA_RE.search(op.line)
+    if m:
+        g = int(m.group(2))
+    else:
+        m2 = _GROUPS_LIST_RE.search(op.line)
+        if m2:
+            g = len([x for x in m2.group(1).split(",") if x.strip()])
+    g = g or 2
+    kind = op.kind.removesuffix("-start")
+    if kind == "all-gather":
+        wire = nbytes * (g - 1) / g
+    elif kind == "all-reduce":
+        wire = 2 * nbytes * (g - 1) / g
+    elif kind == "reduce-scatter":
+        wire = nbytes * (g - 1)
+    elif kind == "all-to-all":
+        wire = nbytes * (g - 1) / g
+    else:                       # collective-permute
+        wire = float(nbytes)
+    return kind, wire
+
+
+def analyse_hlo(hlo: str, entry: str | None = None,
+                tpu_projection: bool = True) -> dict:
+    comps = parse_module(hlo)
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+        entry = m.group(1) if m else next(iter(comps))
+    memo: dict[str, dict] = {}
+
+    def comp_cost(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        memo[name] = z = {"flops": 0.0, "hbm_bytes": 0.0,
+                          "coll": {k: 0.0 for k in COLLECTIVE_KINDS},
+                          "coll_count": 0.0}
+        comp = comps.get(name)
+        if comp is None:
+            return z
+        for op in comp.ops:
+            kind = op.kind
+            if kind in ("dot", "convolution"):
+                z["flops"] += _dot_flops(op, comp)
+            ck = kind.removesuffix("-start")
+            if ck in COLLECTIVE_KINDS and not kind.endswith("-done"):
+                k2, wire = _coll_wire(op)
+                z["coll"][k2] += wire
+                z["coll_count"] += 1
+            # nested computations
+            if kind == "fusion" or kind == "map":
+                cm = _CALLS_RE.search(op.line) or _TO_APPLY_RE.search(
+                    op.line)
+                if cm:
+                    sub = comp_cost(cm.group(1))
+                    z["flops"] += sub["flops"]
+                    for k3 in COLLECTIVE_KINDS:
+                        z["coll"][k3] += sub["coll"][k3]
+                    z["coll_count"] += sub["coll_count"]
+            elif kind == "call":
+                cm = _TO_APPLY_RE.search(op.line)
+                if cm:
+                    _acc(z, comp_cost(cm.group(1)), 1.0)
+            elif kind == "while":
+                bm, cm2 = _BODY_RE.search(op.line), _COND_RE.search(
+                    op.line)
+                tm = _TRIP_RE.search(op.line)
+                trips = float(tm.group(1)) if tm else 1.0
+                if bm:
+                    _acc(z, comp_cost(bm.group(1)), trips)
+                if cm2:
+                    _acc(z, comp_cost(cm2.group(1)), trips + 1)
+            elif kind == "conditional":
+                branches = re.findall(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"(?:true|false)_computation=%?([\w.\-]+))", op.line)
+                names = []
+                for a, b in branches:
+                    if a:
+                        names += _OPERAND_RE.findall(a)
+                    if b:
+                        names.append(b)
+                if names:
+                    worst = max((comp_cost(n) for n in names),
+                                key=lambda c: c["flops"] + c["hbm_bytes"])
+                    _acc(z, worst, 1.0)
+            # HBM bytes: scheduled ops only (operands + result)
+            if kind not in _NO_BYTES and not (
+                    tpu_projection and kind in _FUSABLE):
+                b = _shape_bytes(op.rtype)
+                for o in _operands(op):
+                    t = comp.symbols.get(o)
+                    if t:
+                        b += _shape_bytes(t)
+                z["hbm_bytes"] += b
+        return z
+
+    def _acc(z, sub, mult):
+        z["flops"] += sub["flops"] * mult
+        z["hbm_bytes"] += sub["hbm_bytes"] * mult
+        for k in COLLECTIVE_KINDS:
+            z["coll"][k] += sub["coll"][k] * mult
+        z["coll_count"] += sub["coll_count"] * mult
+
+    total = comp_cost(entry)
+    total = dict(total)
+    total["coll_total"] = sum(total["coll"].values())
+    return total

@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's
+weak-type-correct, shardable, zero-allocation inputs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.models import model as M
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape_name: str):
+    """Returns (kind, spec_tree) for the (arch x shape) cell.
+
+    train:   {"tokens","labels"[, "encoder_frames"][, "vision_embeds"]}
+    prefill: same minus labels
+    decode:  {"cache": <cache tree>, "tokens": [B,1]
+              [, "cross_src": encoder output]}
+    """
+    cfg = get_config(arch)
+    sp = SHAPES[shape_name]
+    B, S = sp.global_batch, sp.seq_len
+
+    def extras():
+        kw = {}
+        if cfg.encoder is not None:
+            kw["encoder_frames"] = sds(
+                (B, cfg.encoder.n_frames, cfg.encoder.d_model),
+                jnp.bfloat16)
+        if cfg.vision_prefix:
+            kw["vision_embeds"] = sds((B, cfg.vision_prefix, cfg.d_model),
+                                      jnp.bfloat16)
+        return kw
+
+    if sp.kind == "train":
+        return "train", dict(tokens=sds((B, S), jnp.int32),
+                             labels=sds((B, S), jnp.int32), **extras())
+    if sp.kind == "prefill":
+        return "prefill", dict(tokens=sds((B, S), jnp.int32), **extras())
+    assert sp.kind == "decode"
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+    out = {"cache": cache, "tokens": sds((B, 1), jnp.int32)}
+    if cfg.encoder is not None:
+        out["cross_src"] = sds((B, cfg.encoder.n_frames,
+                                cfg.encoder.d_model), jnp.bfloat16)
+    return "decode", out
+
+
+def state_shapes(cfg, opts):
+    """Train-state ShapeDtypeStructs (eval_shape — no allocation)."""
+    from repro.train.step import init_train_state
+    return jax.eval_shape(
+        lambda: init_train_state(jax.random.key(0), cfg, opts))

@@ -1,0 +1,116 @@
+"""Training launcher: data pipeline + train step + fault-tolerant loop.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --smoke --steps 50 --batch 4 --seq 64 --ckpt-dir /tmp/run1
+
+Defaults run the reduced (smoke) config on the local devices; the same
+flags drive the production mesh on a real pod (--mesh single|multi —
+requires the matching device count).  Restart the same command after a
+crash/preemption: it resumes from the newest committed checkpoint, on
+the current mesh (elastic).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data import DataPipeline, PipelineConfig
+from repro.launch.mesh import make_production_mesh
+from repro.runtime import FaultTolerantLoop, PreemptionSignal
+from repro.train.step import (TrainOptions, init_train_state,
+                              make_train_step)
+
+
+def build(args):
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    if args.mesh == "local":
+        n = jax.device_count()
+        mesh = jax.make_mesh((n, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        from repro.models.common import set_shard_mesh
+        set_shard_mesh(mesh)
+    opts = TrainOptions(
+        dp_mode=args.dp_mode, dp_algorithm=args.dp_algorithm,
+        grad_buckets=args.grad_buckets, moe_mode=args.moe_mode,
+        ep_alltoall=args.ep_alltoall, remat=not args.smoke,
+        peak_lr=args.lr, warmup_steps=max(1, args.steps // 20),
+        total_steps=args.steps)
+    return cfg, mesh, opts
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--mesh", default="local",
+                    choices=["local", "single", "multi"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--dp-mode", default="fsdp")
+    ap.add_argument("--dp-algorithm", default="xla")
+    ap.add_argument("--grad-buckets", type=int, default=1)
+    ap.add_argument("--moe-mode", default="dropless")
+    ap.add_argument("--ep-alltoall", default="xla")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg, mesh, opts = build(args)
+    pipe = DataPipeline(PipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch))
+    with jax.set_mesh(mesh):
+        step_fn = jax.jit(make_train_step(cfg, mesh, opts))
+        state = init_train_state(jax.random.key(0), cfg, opts)
+
+        losses = []
+        t_last = [time.time()]
+
+        def one_step(state, step):
+            batch = pipe.batch(step)
+            state, metrics = step_fn(state, batch)
+            losses.append(float(metrics["loss"]))
+            if (step + 1) % args.log_every == 0:
+                dt = (time.time() - t_last[0]) / args.log_every
+                t_last[0] = time.time()
+                print(f"step {step+1:5d}  loss {losses[-1]:.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  "
+                      f"{dt*1e3:.0f} ms/step", flush=True)
+            return state
+
+        if args.ckpt_dir:
+            loop = FaultTolerantLoop(args.ckpt_dir,
+                                     ckpt_every=args.ckpt_every,
+                                     preemption=PreemptionSignal(True))
+            state, start = loop.resume_or_init(state)
+            if start:
+                print(f"resumed from step {start}")
+            state, stopped = loop.run(state, one_step,
+                                      start_step=start,
+                                      num_steps=args.steps - start)
+        else:
+            for s in range(args.steps):
+                state = one_step(state, s)
+
+    if losses:
+        print(f"final loss {np.mean(losses[-5:]):.4f} "
+              f"(first {np.mean(losses[:5]):.4f})")
+    else:
+        print("nothing to do (already past --steps; checkpoint is "
+              "complete)")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

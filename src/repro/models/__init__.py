@@ -1,0 +1,5 @@
+from repro.models.config import (  # noqa: F401
+    AttnConfig, MLAConfig, MambaConfig, ModelConfig, MoEConfig,
+    RWKVConfig, BlockSpec,
+)
+from repro.models.model import init_params, forward, lm_loss  # noqa: F401

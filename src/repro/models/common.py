@@ -1,0 +1,154 @@
+"""Shared model primitives: norms, rotary embeddings, masks, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm(x, scale, eps=1e-6, *, gemma_style=False):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if gemma_style \
+        else scale.astype(jnp.float32)
+    return (y * w).astype(x.dtype)
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)      # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., S, D/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Qwen2-VL multimodal RoPE: three position streams (t, h, w) rotate
+    disjoint frequency sections.  positions3: [3, ..., S]."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)      # [D/2]
+    # section s uses positions3[s] for its slice of freq indices
+    sec = np.concatenate([[0], np.cumsum(np.asarray(sections))])
+    assert sec[-1] == d // 2, (sections, d)
+    which = np.zeros(d // 2, np.int32)
+    for i in range(len(sections)):
+        which[sec[i]: sec[i + 1]] = i
+    # gather per-frequency position stream: [..., S, D/2]
+    p = jnp.moveaxis(positions3, 0, -1).astype(jnp.float32)     # [..., S, 3]
+    p = p[..., which]                                            # [..., S, D/2]
+    ang = p * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+
+def attn_mask(q_pos, k_pos, *, causal=True, window=None):
+    """Boolean [..., Sq, Sk] mask; True = attend.  ``window`` counts how
+    far back attention reaches (gemma2 local layers)."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if causal:
+        m &= k <= q
+    if window is not None:
+        m &= k > q - window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+# ---------------------------------------------------------------------------
+# sharding hints (set by launchers; no-ops outside a production mesh)
+# ---------------------------------------------------------------------------
+
+_HINT_MESH = None
+_HINT_LEVEL = 1
+
+
+def set_shard_mesh(mesh, level: int = 1):
+    """Launchers register the mesh so model internals can place sharding
+    constraints.  level 1 (baseline): context-parallel attention logits
+    only.  level 2 (+SP): the residual stream itself is sequence-sharded
+    over "model" between blocks, so norms/projections/MLP run on the
+    sequence shard and only attention's k/v gather the full sequence —
+    Megatron sequence parallelism generalized to this mesh.  None
+    disables."""
+    global _HINT_MESH, _HINT_LEVEL
+    _HINT_MESH = mesh
+    _HINT_LEVEL = level
+
+
+def shard_hint(x, role: str):
+    """Constraint for big intermediates.  'attn_logits': [B, H, Sq, Sk]
+    — none of the assigned archs have H divisible by the 16-wide model
+    axis, so attention compute is sharded over the *query sequence*
+    (context parallelism) instead; batch rides the data axes."""
+    mesh = _HINT_MESH
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    names = mesh.axis_names
+    model_n = mesh.shape["model"]
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    bn = 1
+    for a in batch_axes:
+        bn *= mesh.shape[a]
+    if role == "attn_logits":
+        B, H, Sq, Sk = x.shape
+        spec = [batch_axes if B % bn == 0 else None, None, None, None]
+        if H % model_n == 0:
+            spec[1] = "model"
+        elif Sq % model_n == 0:
+            spec[2] = "model"
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+    if role == "residual" and _HINT_LEVEL >= 2:
+        B, S, d = x.shape
+        if S % model_n or B % bn:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(batch_axes, "model", None)))
+    if role == "kv_full" and _HINT_LEVEL >= 2:
+        # k/v must carry the whole sequence: gather over "model"
+        B = x.shape[0]
+        spec = [batch_axes if B % bn == 0 else None] \
+            + [None] * (x.ndim - 1)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+    return x
+
+
+def dense_init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(jnp.bfloat16)
+
+
+def split_keys(key, names):
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))

@@ -1,0 +1,162 @@
+"""Mamba-1 selective SSM (Jamba's attention-free mixer).
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t        (per channel)
+    y_t = C_t . h_t + D * x_t
+with input-dependent dt, B, C (the selectivity).  Sequence processing is
+a chunked ``lax.scan`` (memory-bounded); decode carries (conv window,
+h) as O(1) state — this is why jamba runs the 500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm, split_keys
+from repro.models.config import MambaConfig
+
+
+def _dt_rank(cfg: MambaConfig, d_model: int) -> int:
+    return cfg.dt_rank or -(-d_model // 16)
+
+
+def init(key, cfg: MambaConfig, d_model: int) -> dict:
+    d_inner = cfg.expand * d_model
+    R = _dt_rank(cfg, d_model)
+    ks = split_keys(key, ["in", "conv", "xp", "dtp", "out", "dt"])
+    A = jnp.broadcast_to(jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32),
+                         (d_inner, cfg.d_state))
+    return {
+        "w_in": dense_init(ks["in"], (d_model, 2 * d_inner)),
+        "conv_w": dense_init(ks["conv"], (cfg.d_conv, d_inner), scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), jnp.bfloat16),
+        "w_x": dense_init(ks["xp"], (d_inner, R + 2 * cfg.d_state)),
+        "w_dt": dense_init(ks["dtp"], (R, d_inner), scale=R ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks["dt"], (d_inner,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        # jamba's inner norms on dt/B/C
+        "dt_norm": jnp.ones((R,), jnp.bfloat16),
+        "b_norm": jnp.ones((cfg.d_state,), jnp.bfloat16),
+        "c_norm": jnp.ones((cfg.d_state,), jnp.bfloat16),
+        "w_out": dense_init(ks["out"], (d_inner, d_model)),
+    }
+
+
+def _conv(x, w, b, carry=None):
+    """Depthwise causal conv1d; x [B,T,Di], w [K,Di].  ``carry`` is the
+    last K-1 inputs from the previous segment (decode)."""
+    K = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+           if carry is None else carry)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b), xp[:, -(K - 1):]
+
+
+def _ssm_inputs(p, cfg: MambaConfig, xc, eps=1e-6):
+    R = p["w_dt"].shape[0]
+    proj = xc @ p["w_x"]
+    dt, B, C = jnp.split(proj, [R, R + cfg.d_state], axis=-1)
+    dt = rmsnorm(dt, p["dt_norm"], eps)
+    B = rmsnorm(B, p["b_norm"], eps).astype(jnp.float32)
+    C = rmsnorm(C, p["c_norm"], eps).astype(jnp.float32)
+    dt = jax.nn.softplus((dt @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])                       # [B,T,Di]
+    A = -jnp.exp(p["A_log"])                                   # [Di,S]
+    dA = jnp.exp(dt[..., None] * A)                            # [B,T,Di,S]
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * B[..., None, :]
+    return dA, dBx, C
+
+
+def forward(p, cfg: MambaConfig, x, *, eps=1e-6, use_kernel=False, **_):
+    """x: [B, T, d] -> [B, T, d] (full sequence).
+
+    The selective-scan inputs (dt, B, C -> dA, dBx) are computed *inside*
+    the scan step from the small projections: materializing dA/dBx over
+    the full sequence is [B, T, d_inner, d_state] floats — tens of TB at
+    jamba scale — where the on-the-fly form streams only [B, T, d_inner]
+    activations (EXPERIMENTS.md §Perf, jamba iteration 1)."""
+    Bsz, T, d = x.shape
+    d_inner = cfg.expand * d
+    R = p["w_dt"].shape[0]
+    xz = x @ p["w_in"]
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _conv(xc, p["conv_w"], p["conv_b"])
+    proj = xc @ p["w_x"]                        # [B, T, R + 2*d_state]
+    A = -jnp.exp(p["A_log"])                    # [Di, S]
+    h0 = jnp.zeros((Bsz, d_inner, cfg.d_state), jnp.float32)
+
+    if use_kernel:
+        # Pallas selective-scan: state + per-step temporaries in VMEM;
+        # HBM sees the xc/dt/B/C streams once (kernels/mamba_scan)
+        from repro.kernels.mamba_scan import ops as ssm_ops
+        S_ = cfg.d_state
+        dts = rmsnorm(proj[..., :R], p["dt_norm"], eps)
+        dts = jax.nn.softplus((dts @ p["w_dt"]).astype(jnp.float32)
+                              + p["dt_bias"]).astype(jnp.bfloat16)
+        Bc = rmsnorm(proj[..., R: R + S_], p["b_norm"], eps)
+        Cc = rmsnorm(proj[..., R + S_:], p["c_norm"], eps)
+        y = ssm_ops.selective_scan(xc, dts, Bc, Cc, A, p["D"])
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+        return y @ p["w_out"]
+
+    def step(h, inp):
+        xc_t, pr_t = inp                        # [B, Di], [B, R+2S]
+        dt = rmsnorm(pr_t[:, :R], p["dt_norm"], eps)
+        Bc = rmsnorm(pr_t[:, R: R + cfg.d_state], p["b_norm"],
+                     eps).astype(jnp.float32)
+        Cc = rmsnorm(pr_t[:, R + cfg.d_state:], p["c_norm"],
+                     eps).astype(jnp.float32)
+        dt = jax.nn.softplus((dt @ p["w_dt"]).astype(jnp.float32)
+                             + p["dt_bias"])                   # [B, Di]
+        dA = jnp.exp(dt[..., None] * A)                        # [B,Di,S]
+        dBx = (dt * xc_t.astype(jnp.float32))[..., None] \
+            * Bc[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, Cc)
+        return h, y
+
+    # chunk-remat: AD through a plain scan stacks h for every step —
+    # [T, B, Di, S] f32, tens of TB at jamba scale.  Saving h only at
+    # chunk boundaries and recomputing inside the chunk caps the stack
+    # at [T/L, B, Di, S] (EXPERIMENTS.md §Perf, jamba iteration 2).
+    L = 64
+    while T % L:
+        L //= 2
+    nC = T // L
+
+    def chunk_fn(h, inp):
+        return jax.lax.scan(step, h, inp)
+
+    chunk_fn = jax.checkpoint(chunk_fn,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (jnp.moveaxis(xc, 1, 0).reshape(nC, L, Bsz, d_inner),
+          jnp.moveaxis(proj, 1, 0).reshape(nC, L, Bsz, proj.shape[-1]))
+    _, ys = jax.lax.scan(chunk_fn, h0, xs)
+    y = jnp.moveaxis(ys.reshape(T, Bsz, d_inner), 0, 1)        # [B,T,Di]
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["w_out"]
+
+
+def init_state(cfg: MambaConfig, batch: int, d_model: int):
+    d_inner = cfg.expand * d_model
+    return {"h": jnp.zeros((batch, d_inner, cfg.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.d_conv - 1, d_inner),
+                              jnp.bfloat16)}
+
+
+def decode_step(p, cfg: MambaConfig, x, state, eps=1e-6):
+    """x: [B, 1, d]; O(1) state update."""
+    xz = x @ p["w_in"]
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_carry = _conv(xc, p["conv_w"], p["conv_b"],
+                           carry=state["conv"].astype(xc.dtype))
+    dA, dBx, C = _ssm_inputs(p, cfg, xc, eps)
+    h = dA[:, 0] * state["h"] + dBx[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, C[:, 0])[:, None]
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["w_out"], {"h": h, "conv": conv_carry.astype(jnp.bfloat16)}

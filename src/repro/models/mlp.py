@@ -1,0 +1,24 @@
+"""Gated MLP (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+ACT = {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True)}
+
+
+def init(key, d_model: int, d_ff: int, gated: bool = True) -> dict:
+    ks = split_keys(key, ["gate", "up", "down"])
+    p = {"w_up": dense_init(ks["up"], (d_model, d_ff)),
+         "w_down": dense_init(ks["down"], (d_ff, d_model))}
+    if gated:
+        p["w_gate"] = dense_init(ks["gate"], (d_model, d_ff))
+    return p
+
+
+def forward(p, x, act: str = "silu"):
+    if "w_gate" in p:
+        return (ACT[act](x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return ACT[act](x @ p["w_up"]) @ p["w_down"]

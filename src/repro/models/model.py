@@ -1,0 +1,249 @@
+"""LM assembly: embed -> prefix blocks -> scan(periods) -> suffix ->
+final norm -> logits.  Covers all assigned families (dense / MoE / SSM /
+hybrid / enc-dec / VLM backbone) from one definition.
+
+The homogeneous middle of every stack runs as ``lax.scan`` over
+parameters stacked on a leading ``n_periods`` axis — HLO size stays
+bounded for the 61/72-layer configs and the FSDP partitioner sees one
+big sharded array per weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, blocks, mlp
+from repro.models.common import dense_init, rmsnorm, softcap, split_keys
+from repro.models.config import EncoderConfig, ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = split_keys(key, ["embed", "prefix", "periods", "suffix", "head",
+                          "encoder"])
+    p: dict = {
+        "embed": dense_init(ks["embed"], (cfg.vocab_size, cfg.d_model),
+                            scale=1.0),
+        "final_norm": (jnp.zeros if cfg.gemma_norm else jnp.ones)(
+            (cfg.d_model,), jnp.bfloat16),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks["head"], (cfg.d_model, cfg.vocab_size))
+    if cfg.prefix:
+        pk = jax.random.split(ks["prefix"], len(cfg.prefix))
+        p["prefix"] = [blocks.init_block(k, s, cfg)
+                       for k, s in zip(pk, cfg.prefix)]
+    if cfg.n_periods:
+        def one_period(k):
+            kk = jax.random.split(k, len(cfg.period))
+            return {f"b{i}": blocks.init_block(kk[i], s, cfg)
+                    for i, s in enumerate(cfg.period)}
+        period_keys = jax.random.split(ks["periods"], cfg.n_periods)
+        per = [one_period(k) for k in period_keys]
+        p["periods"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    if cfg.suffix:
+        sk = jax.random.split(ks["suffix"], len(cfg.suffix))
+        p["suffix"] = [blocks.init_block(k, s, cfg)
+                       for k, s in zip(sk, cfg.suffix)]
+    if cfg.encoder is not None:
+        p["encoder"] = init_encoder(ks["encoder"], cfg)
+    return p
+
+
+def init_encoder(key, cfg: ModelConfig) -> dict:
+    enc = cfg.encoder
+    ks = jax.random.split(key, enc.n_layers + 1)
+    enc_attn = dataclasses.replace(
+        cfg.attn, causal=False, n_heads=enc.n_heads, n_kv_heads=enc.n_heads,
+        head_dim=enc.d_model // enc.n_heads)
+    enc_cfg = dataclasses.replace(
+        cfg, d_model=enc.d_model, d_ff=enc.d_ff, attn=enc_attn)
+    spec = blocks.BlockSpec(mixer="attn", ff="mlp")
+    return {"layers": [blocks.init_block(k, spec, enc_cfg)
+                       for k in ks[:-1]],
+            "final_norm": jnp.ones((enc.d_model,), jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _positions_for(cfg: ModelConfig, B, S):
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    if cfg.attn is not None and cfg.attn.mrope_sections is not None:
+        return jnp.broadcast_to(pos[None], (3, 1, S))
+    return pos
+
+
+def encode(p, cfg: ModelConfig, frames):
+    """Whisper encoder on precomputed (stubbed conv-frontend) frames."""
+    enc = cfg.encoder
+    enc_attn = dataclasses.replace(
+        cfg.attn, causal=False, n_heads=enc.n_heads, n_kv_heads=enc.n_heads,
+        head_dim=enc.d_model // enc.n_heads)
+    enc_cfg = dataclasses.replace(cfg, d_model=enc.d_model, d_ff=enc.d_ff,
+                                  attn=enc_attn)
+    spec = blocks.BlockSpec(mixer="attn", ff="mlp")
+    x = frames
+    pos = jnp.arange(frames.shape[1], dtype=jnp.int32)[None, :]
+    for lp in p["encoder"]["layers"]:
+        x = blocks.forward(lp, spec, enc_cfg, x, positions=pos)
+    return rmsnorm(x, p["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def embed_tokens(p, cfg: ModelConfig, tokens, vision_embeds=None):
+    x = p["embed"][tokens]
+    if cfg.gemma_norm:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.vision_prefix and vision_embeds is not None:
+        n_vis = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype),
+                             x[:, n_vis:]], axis=1)
+    return x
+
+
+def forward(p, cfg: ModelConfig, tokens, *, positions=None,
+            vision_embeds=None, encoder_frames=None, use_kernel=False,
+            moe_dispatch=None, remat=False):
+    """tokens [B, S] -> logits [B, S, V]."""
+    B, S = tokens.shape
+    x = embed_tokens(p, cfg, tokens, vision_embeds)
+    if positions is None:
+        positions = _positions_for(cfg, B, S)
+    cross_src = (encode(p, cfg, encoder_frames)
+                 if cfg.encoder is not None else None)
+    kw = dict(positions=positions, cross_src=cross_src,
+              use_kernel=use_kernel, moe_dispatch=moe_dispatch)
+
+    for lp, spec in zip(p.get("prefix", []), cfg.prefix):
+        x = blocks.forward(lp, spec, cfg, x, **kw)
+
+    if cfg.n_periods:
+        def body(x, period_p):
+            for i, spec in enumerate(cfg.period):
+                x = blocks.forward(period_p[f"b{i}"], spec, cfg, x, **kw)
+            return x, None
+        if remat:   # recompute period activations in the backward pass
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, p["periods"])
+
+    for lp, spec in zip(p.get("suffix", []), cfg.suffix):
+        x = blocks.forward(lp, spec, cfg, x, **kw)
+
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps, gemma_style=cfg.gemma_norm)
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = x @ head
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits
+
+
+def lm_loss(p, cfg: ModelConfig, tokens, labels, *, reduction="mean",
+            **kw):
+    """Next-token cross-entropy; labels < 0 are masked.
+
+    reduction="mean": scalar mean over live tokens.
+    reduction="sum_count": (sum, live_count) — what data-parallel shards
+    exchange so the global mean is exact under uneven masking."""
+    logits = forward(p, cfg, tokens, **kw).astype(jnp.float32)
+    mask = labels >= 0
+    lbl = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lbl[..., None], -1)[..., 0]
+    nll = (logz - gold) * mask
+    if reduction == "sum_count":
+        return nll.sum(), mask.sum()
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    c: dict = {}
+    if cfg.prefix:
+        c["prefix"] = [blocks.init_cache(s, cfg, batch, max_len)
+                       for s in cfg.prefix]
+    if cfg.n_periods:
+        one = {f"b{i}": blocks.init_cache(s, cfg, batch, max_len)
+               for i, s in enumerate(cfg.period)}
+        c["periods"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape).copy()
+            if hasattr(x, "shape") else x, one)
+    if cfg.suffix:
+        c["suffix"] = [blocks.init_cache(s, cfg, batch, max_len)
+                       for s in cfg.suffix]
+    return c
+
+
+def decode_step(p, cfg: ModelConfig, cache, tokens, *, cross_src=None):
+    """tokens [B, 1] -> (logits [B, 1, V], cache')."""
+    x = embed_tokens(p, cfg, tokens)
+    new_cache: dict = {}
+    if cfg.prefix:
+        new_cache["prefix"] = []
+        for lp, spec, lc in zip(p["prefix"], cfg.prefix, cache["prefix"]):
+            x, lc = blocks.decode(lp, spec, cfg, x, lc, cross_src=cross_src)
+            new_cache["prefix"].append(lc)
+    if cfg.n_periods:
+        def body(x, scanned):
+            period_p, period_c = scanned
+            for i, spec in enumerate(cfg.period):
+                x, period_c[f"b{i}"] = blocks.decode(
+                    period_p[f"b{i}"], spec, cfg, x, period_c[f"b{i}"],
+                    cross_src=cross_src)
+            return x, period_c
+        x, pc = jax.lax.scan(body, x, (p["periods"], cache["periods"]))
+        new_cache["periods"] = pc
+    if cfg.suffix:
+        new_cache["suffix"] = []
+        for lp, spec, lc in zip(p["suffix"], cfg.suffix, cache["suffix"]):
+            x, lc = blocks.decode(lp, spec, cfg, x, lc, cross_src=cross_src)
+            new_cache["suffix"].append(lc)
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps, gemma_style=cfg.gemma_norm)
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = x @ head
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# parameter counting
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    total = sum(x.size for x in jax.tree.leaves(shapes))
+    if active_only and cfg.moe is not None:
+        # discount routed experts to the activated fraction
+        def expert_size(tree):
+            n = 0
+            for k in ("w_gate", "w_up", "w_down"):
+                if k in tree:
+                    n += tree[k].size
+            return n
+        moe_total = 0
+        for sub in ("prefix", "suffix"):
+            for b, spec in zip(shapes.get(sub, []), getattr(cfg, sub)):
+                if spec.ff == "moe":
+                    moe_total += expert_size(b["moe"])
+        if cfg.n_periods and "periods" in shapes:
+            for i, spec in enumerate(cfg.period):
+                if spec.ff == "moe":
+                    moe_total += expert_size(shapes["periods"][f"b{i}"]["moe"])
+        frac = 1.0 - cfg.moe.top_k / cfg.moe.n_experts
+        total -= int(moe_total * frac)
+    return total

@@ -1,0 +1,167 @@
+"""RWKV-6 (Finch): data-dependent-decay linear attention (arXiv:2404.05892).
+
+Time-mix (wkv6) per head of size N:
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+with per-channel decay w_t = exp(-exp(w0 + lora_w(x))) — the Finch
+novelty (data-dependent w).  Token-shift interpolations are likewise
+data-dependent through small LoRAs.
+
+The recurrence reference here is an O(T) ``lax.scan``; the TPU hot path
+is the chunked Pallas kernel in ``repro.kernels.wkv6`` (selected via
+``use_kernel``).  Decode carries S as an O(1) state — this is why
+rwkv6-3b runs the 500k-token cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+from repro.models.config import RWKVConfig
+
+
+def init(key, cfg: RWKVConfig, d_model: int) -> dict:
+    ks = split_keys(key, ["r", "k", "v", "w", "g", "o", "lw", "lg",
+                          "mu", "u", "w0", "ln", "cr", "ck", "cv"])
+    n_heads = d_model // cfg.head_dim
+    p = {
+        # time-mix projections
+        "wr": dense_init(ks["r"], (d_model, d_model)),
+        "wk": dense_init(ks["k"], (d_model, d_model)),
+        "wv": dense_init(ks["v"], (d_model, d_model)),
+        "wg": dense_init(ks["g"], (d_model, d_model)),
+        "wo": dense_init(ks["o"], (d_model, d_model)),
+        # data-dependent decay lora: d -> L -> d
+        "w_lora_a": dense_init(ks["lw"], (d_model, cfg.decay_lora)),
+        "w_lora_b": dense_init(ks["w0"], (cfg.decay_lora, d_model),
+                               scale=0.01),
+        "w0": jnp.full((d_model,), -6.0, jnp.float32),   # slow decay init
+        # token-shift mixing coefficients (static part; 5 streams r,k,v,w,g)
+        "mu": jax.random.uniform(ks["mu"], (5, d_model), jnp.float32),
+        # per-channel bonus
+        "u": (jax.random.normal(ks["u"], (d_model,), jnp.float32) * 0.1),
+        # group-norm per head after wkv
+        "ln_w": jnp.ones((d_model,), jnp.float32),
+        "ln_b": jnp.zeros((d_model,), jnp.float32),
+    }
+    assert n_heads * cfg.head_dim == d_model
+    return p
+
+
+def channel_mix_init(key, d_model: int, d_ff: int) -> dict:
+    ks = split_keys(key, ["r", "k", "v", "mu"])
+    return {"wr": dense_init(ks["r"], (d_model, d_model)),
+            "wk": dense_init(ks["k"], (d_model, d_ff)),
+            "wv": dense_init(ks["v"], (d_ff, d_model)),
+            "mu": jax.random.uniform(ks["mu"], (2, d_model), jnp.float32)}
+
+
+def _token_shift(x, last=None):
+    """shifted[t] = x[t-1]; position 0 gets ``last`` (decode carry) or 0."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def wkv_scan(r, k, v, w, u, s0=None):
+    """Reference recurrence.  r,k,v,w: [B, T, H, N]; u: [H, N].
+    Returns y [B, T, H, N] and final state [B, H, N, N]."""
+    B, T, H, N = r.shape
+    s = (jnp.zeros((B, H, N, N), jnp.float32) if s0 is None
+         else s0.astype(jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                 # [B, H, N]
+        kv = kt[..., :, None] * vt[..., None, :]             # [B,H,N,N]
+        y = jnp.einsum("bhn,bhnm->bhm", rt,
+                       s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = (jnp.moveaxis(r, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(w, 1, 0).astype(jnp.float32))
+    s, ys = jax.lax.scan(step, s, xs)
+    return jnp.moveaxis(ys, 0, 1), s
+
+
+def _mix_streams(p, cfg, x, shifted):
+    xx = shifted - x
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + xx * mu[i] for i in range(5))
+    d = x.shape[-1]
+    H, N = d // cfg.head_dim, cfg.head_dim
+    shp = x.shape[:-1] + (H, N)
+    r = (xr @ p["wr"]).reshape(shp)
+    k = (xk @ p["wk"]).reshape(shp)
+    v = (xv @ p["wv"]).reshape(shp)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = jnp.exp(-jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + ((xw @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)))
+    w = w.reshape(shp)
+    return r, k, v, w, g
+
+
+def _group_norm(y, p, eps=1e-5):
+    """Per-head layernorm of the wkv output."""
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + eps)
+    flat = y.reshape(y.shape[:-2] + (-1,))
+    return flat * p["ln_w"] + p["ln_b"]
+
+
+def time_mix(p, cfg: RWKVConfig, x, *, use_kernel=False):
+    """Full-sequence time-mix: x [B, T, d] -> [B, T, d]."""
+    B, T, d = x.shape
+    H, N = d // cfg.head_dim, cfg.head_dim
+    r, k, v, w, g = _mix_streams(p, cfg, x, _token_shift(x))
+    u = p["u"].reshape(H, N)
+    if use_kernel:
+        from repro.kernels.wkv6 import ops as wkv_ops
+        y = wkv_ops.wkv6(r, k, v, w, u)
+    else:
+        y, _ = wkv_scan(r, k, v, w, u)
+    y = _group_norm(y, p).astype(x.dtype) * g
+    return y @ p["wo"]
+
+
+def channel_mix(p, x, last=None):
+    shifted = _token_shift(x, last)
+    xx = shifted - x
+    mu = p["mu"].astype(x.dtype)
+    xk, xr = x + xx * mu[0], x + xx * mu[1]
+    r = jax.nn.sigmoid(xr @ p["wr"])
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return r * (k @ p["wv"])
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) state)
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: RWKVConfig, batch: int, d_model: int):
+    H, N = d_model // cfg.head_dim, cfg.head_dim
+    return {"s": jnp.zeros((batch, H, N, N), jnp.float32),
+            "x_tm": jnp.zeros((batch, d_model), jnp.bfloat16),
+            "x_cm": jnp.zeros((batch, d_model), jnp.bfloat16)}
+
+
+def decode_time_mix(p, cfg: RWKVConfig, x, state):
+    """x: [B, 1, d]; O(1) per-token state update."""
+    B, _, d = x.shape
+    H, N = d // cfg.head_dim, cfg.head_dim
+    r, k, v, w, g = _mix_streams(p, cfg, x, state["x_tm"][:, None])
+    u = p["u"].reshape(H, N)
+    y, s = wkv_scan(r, k, v, w, u, s0=state["s"])
+    y = _group_norm(y, p).astype(x.dtype) * g
+    state = dict(state, s=s, x_tm=x[:, 0].astype(state["x_tm"].dtype))
+    return y @ p["wo"], state
+
+
+def decode_channel_mix(p, x, state):
+    y = channel_mix(p, x, last=state["x_cm"].astype(x.dtype))
+    return y, dict(state, x_cm=x[:, 0].astype(state["x_cm"].dtype))

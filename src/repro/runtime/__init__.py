@@ -1,0 +1,4 @@
+from repro.runtime.fault import (  # noqa: F401
+    FaultTolerantLoop, PreemptionSignal)
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.elastic import remesh_plan  # noqa: F401

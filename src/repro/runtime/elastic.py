@@ -1,0 +1,43 @@
+"""Elastic scaling: restore a run onto a different mesh shape.
+
+Checkpoints store host numpy (sharding-free); the train state is
+re-placed under the new mesh by ``jax.device_put`` with the new
+sharding.  What must *change consistently* is the data decomposition
+and the per-device batch — ``remesh_plan`` computes that and validates
+divisibility, so a 2-pod run can restart as 1-pod (degraded) or 4-pod
+(scaled up) without touching the global training trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_devices: int
+    new_devices: int
+    global_batch: int
+    per_device_batch: int
+    num_data_shards: int
+
+    @property
+    def scale(self) -> float:
+        return self.new_devices / self.old_devices
+
+
+def remesh_plan(*, global_batch: int, old_devices: int, new_devices: int,
+                data_axis_size: int) -> RemeshPlan:
+    """Keep the global batch invariant; redistribute rows.
+
+    data_axis_size = product of batch-sharded mesh axes on the NEW mesh.
+    """
+    if global_batch % data_axis_size:
+        raise ValueError(
+            f"global_batch {global_batch} not divisible by new data axis "
+            f"{data_axis_size}; elastic restore would change the "
+            f"trajectory")
+    return RemeshPlan(
+        old_devices=old_devices, new_devices=new_devices,
+        global_batch=global_batch,
+        per_device_batch=global_batch // data_axis_size,
+        num_data_shards=data_axis_size)

@@ -1,0 +1,83 @@
+"""Fault handling for long runs: preemption-aware checkpoint/restart.
+
+At 1000+ nodes the mean time between node failures is minutes-to-hours;
+the contract implemented here is the standard production one:
+
+  * periodic async checkpoints (every ``ckpt_every`` steps),
+  * a preemption signal (SIGTERM on most schedulers) triggers one final
+    synchronous checkpoint before exit,
+  * on (re)start, training resumes from the newest committed step —
+    combined with the step-addressable data pipeline this makes any
+    crash exactly-once-recoverable: no data is skipped or repeated,
+  * restart may happen on a *different* mesh shape (elastic restore —
+    leaves come back as host numpy and are re-placed).
+"""
+from __future__ import annotations
+
+import signal
+from typing import Callable
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, \
+    restore_checkpoint
+
+
+class PreemptionSignal:
+    """Latches SIGTERM/SIGINT-style preemption notices (or test calls)."""
+
+    def __init__(self, install_handlers: bool = False):
+        self._hit = False
+        if install_handlers:
+            signal.signal(signal.SIGTERM, lambda *_: self.trigger())
+
+    def trigger(self):
+        self._hit = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._hit
+
+
+class FaultTolerantLoop:
+    """Drives ``step_fn(state, step) -> state`` with checkpoint/restart.
+
+    step_fn must be pure w.r.t. (state, step); the data pipeline is
+    addressed by ``step`` inside it.  ``state`` is a pytree.
+    """
+
+    def __init__(self, ckpt_dir, *, ckpt_every: int = 100,
+                 preemption: PreemptionSignal | None = None,
+                 num_shards: int = 1):
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.preemption = preemption or PreemptionSignal()
+        self.ckpt = AsyncCheckpointer(ckpt_dir, num_shards=num_shards)
+
+    def resume_or_init(self, init_state):
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return init_state, 0
+        tree, meta = restore_checkpoint(self.ckpt_dir, init_state,
+                                        step=step)
+        return tree, meta.get("next_step", step + 1)
+
+    def run(self, state, step_fn: Callable, *, start_step: int,
+            num_steps: int, on_step=None):
+        step = start_step
+        end = start_step + num_steps
+        while step < end:
+            state = step_fn(state, step)
+            step += 1
+            if on_step is not None:
+                on_step(step, state)
+            if step % self.ckpt_every == 0:
+                self.ckpt.save(step, state, meta={"next_step": step})
+            if self.preemption.preempted:
+                self.ckpt.wait()
+                self.ckpt.save(step, state, meta={"next_step": step,
+                                                  "preempted": True})
+                self.ckpt.wait()
+                return state, step
+        self.ckpt.wait()
+        self.ckpt.save(end, state, meta={"next_step": end})
+        self.ckpt.wait()
+        return state, step

@@ -1,0 +1,2 @@
+from repro.serve.step import (  # noqa: F401
+    ServeOptions, make_decode_step, make_prefill_step, init_serve_cache)

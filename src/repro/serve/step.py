@@ -1,0 +1,91 @@
+"""Serving steps: batched prefill + KV-cache decode.
+
+Sharding (sharding.cache_specs):
+  * decode_32k  — batch over (pod, data), heads over model.
+  * long_500k   — batch 1: KV / recurrent state sequence-sharded over
+    the data axes (sequence parallelism); the partitioner turns the
+    softmax over the sharded KV length into partial-softmax + psum (the
+    log-sum-exp combine), so one decode step touches each chip's KV
+    shard locally and crosses the wire with O(heads) scalars.
+    Only the sub-quadratic archs (rwkv6, jamba) run this cell.
+
+Decode greedily samples (argmax) to keep the step closed under jit;
+the example driver shows temperature sampling on top of the logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.train import sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeOptions:
+    use_kernel: bool = False
+    long_context: bool = False       # SP cache layout (batch-1 decode)
+
+
+def init_serve_cache(cfg, batch: int, max_len: int):
+    return M.init_cache(cfg, batch, max_len)
+
+
+def make_prefill_step(cfg, mesh, opts: ServeOptions) -> Callable:
+    """(params, tokens[, frames/vision]) -> logits — full-sequence
+    forward used for prompt processing; dry-run target of prefill_32k."""
+
+    def prefill(params, batch):
+        kw = {}
+        if cfg.encoder is not None:
+            kw["encoder_frames"] = batch["encoder_frames"]
+        if cfg.vision_prefix:
+            kw["vision_embeds"] = batch["vision_embeds"]
+        return M.forward(params, cfg, batch["tokens"],
+                         use_kernel=opts.use_kernel, **kw)
+
+    return prefill
+
+
+def make_decode_step(cfg, mesh, opts: ServeOptions) -> Callable:
+    """(params, cache, tokens [B,1][, cross_src]) ->
+    (next_tokens [B,1], cache').  ``cross_src`` is the precomputed
+    encoder output for enc-dec archs (whisper)."""
+
+    if cfg.encoder is not None:
+        def decode(params, cache, tokens, cross_src):
+            logits, cache = M.decode_step(params, cfg, cache, tokens,
+                                          cross_src=cross_src)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt[:, None], cache
+        return decode
+
+    def decode(params, cache, tokens):
+        logits, cache = M.decode_step(params, cfg, cache, tokens)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    return decode
+
+
+def jit_decode_step(cfg, mesh, opts: ServeOptions, params, cache):
+    pspec = sharding.param_specs(params, cfg, mesh)
+    cspec = sharding.cache_specs(cache, cfg, mesh,
+                                 long_context=opts.long_context)
+    d_axes = sharding.data_axes(mesh)
+    tok_spec = P() if opts.long_context else P(d_axes)
+    to_sh = lambda spec: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec,
+        is_leaf=lambda x: isinstance(x, P))
+    step = make_decode_step(cfg, mesh, opts)
+    in_sh = [to_sh(pspec), to_sh(cspec), NamedSharding(mesh, tok_spec)]
+    if cfg.encoder is not None:
+        in_sh.append(NamedSharding(mesh, P(d_axes)))
+    return jax.jit(step,
+                   in_shardings=tuple(in_sh),
+                   out_shardings=(NamedSharding(mesh, tok_spec),
+                                  to_sh(cspec))), (pspec, cspec)

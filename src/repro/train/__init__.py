@@ -1,0 +1,2 @@
+from repro.train.sharding import param_specs, batch_specs, data_axes  # noqa: F401
+from repro.train.step import TrainOptions, make_train_step, init_train_state  # noqa: F401

@@ -1,0 +1,26 @@
+"""Subprocess check: the 512-device multi-pod dry-run machinery works
+end-to-end for representative cells (must be its own process: the
+forced device count locks at first jax init)."""
+from repro.launch import dryrun  # noqa: F401  (sets XLA_FLAGS first)
+
+import numpy as np
+
+CELLS = [
+    ("smollm-360m", "train_4k", False),
+    ("smollm-360m", "train_4k", True),      # multi-pod: pod axis shards
+    ("rwkv6-3b", "long_500k", False),       # SSM 500k decode
+]
+
+for arch, shape, mp in CELLS:
+    res = dryrun.analyse(arch, shape, multi_pod=mp, verbose=False,
+                         train_overrides={"moe_mode": "mpix_ep"})
+    assert res["flops_per_device"] > 0
+    assert res["hbm_bytes_per_device"] > 0
+    assert res["mem"]["peak_bytes"] > 0
+    assert np.isfinite(res["collectives"]["total"])
+    mesh = "2x16x16" if mp else "16x16"
+    print(f"{arch:14s} {shape:10s} {mesh:8s} ok "
+          f"(compile {res['compile_s']}s, "
+          f"coll {res['collectives']['total']:.2e} B)")
+
+print("ALL OK")

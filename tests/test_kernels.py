@@ -1,0 +1,201 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose against
+the ref.py pure-jnp oracle (kernels run in interpret mode on CPU)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import ops as attn_ops
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.wkv6 import ops as wkv_ops
+from repro.kernels.wkv6.ref import wkv6_ref
+from repro.kernels.rmsnorm import ops as rms_ops
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+rng = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,K,D,bq,bk",
+    [(1, 32, 1, 1, 16, 16, 16),       # minimal
+     (2, 64, 4, 2, 32, 32, 32),       # GQA 2:1
+     (1, 128, 8, 1, 64, 64, 32),      # MQA, rectangular blocks
+     (2, 96, 6, 3, 32, 32, 48)])      # non-pow2 heads/blocks
+def test_flash_attention_sweep(B, S, H, K, D, bq, bk, dtype):
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, K, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, K, D)), dtype)
+    got = attn_ops.flash_attention(q, k, v, True, None, None, None,
+                                   bq, bk)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("window,softcap,causal",
+                         [(16, None, True), (None, 30.0, True),
+                          (8, 50.0, True), (None, None, False)])
+def test_flash_attention_variants(window, softcap, causal):
+    B, S, H, K, D = 2, 64, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
+    got = attn_ops.flash_attention(q, k, v, causal, window, softcap,
+                                   None, 32, 32)
+    want = attention_ref(q, k, v, causal=causal, window=window,
+                         softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_flash_attention_grad_matches_ref():
+    B, S, H, K, D = 1, 32, 2, 1, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
+    g1 = jax.grad(lambda a: attn_ops.flash_attention(
+        a, k, v, True, None, None, None, 16, 16).sum())(q)
+    g2 = jax.grad(lambda a: attention_ref(a, k, v, causal=True).sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,N,bt",
+                         [(1, 16, 1, 8, 8), (2, 64, 3, 16, 16),
+                          (1, 128, 2, 32, 64), (2, 48, 4, 8, 16)])
+def test_wkv6_sweep(B, T, H, N, bt, dtype):
+    r = jnp.asarray(rng.normal(size=(B, T, H, N)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, T, H, N)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, T, H, N)), dtype)
+    # realistic decay domain: w = exp(-exp(x)) in (0, 1)
+    w = jnp.exp(-jnp.exp(jnp.asarray(
+        rng.normal(size=(B, T, H, N)), jnp.float32))).astype(dtype)
+    u = jnp.asarray(rng.normal(size=(H, N)), jnp.float32)
+    got = wkv_ops.wkv6(r, k, v, w, u, bt)
+    want, _ = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dtype))
+
+
+def test_wkv6_grad_matches_ref():
+    B, T, H, N = 1, 16, 2, 8
+    args = [jnp.asarray(rng.normal(size=(B, T, H, N)), jnp.float32)
+            for _ in range(3)]
+    w = jnp.exp(-jnp.exp(jnp.asarray(
+        rng.normal(size=(B, T, H, N)), jnp.float32)))
+    u = jnp.asarray(rng.normal(size=(H, N)), jnp.float32)
+    g1 = jax.grad(lambda r: wkv_ops.wkv6(r, args[1], args[2], w, u,
+                                         8).sum())(args[0])
+    g2 = jax.grad(lambda r: wkv6_ref(r, args[1], args[2], w,
+                                     u)[0].sum())(args[0])
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 32), (2, 8, 128), (3, 5, 7, 64),
+                                   (1, 960)])
+@pytest.mark.parametrize("gemma", [False, True])
+def test_rmsnorm_sweep(shape, dtype, gemma):
+    x = jnp.asarray(rng.normal(size=shape), dtype)
+    s = jnp.asarray(rng.normal(size=shape[-1:]), dtype)
+    got = rms_ops.rmsnorm(x, s, 1e-6, gemma)
+    want = rmsnorm_ref(x, s, eps=1e-6, gemma_style=gemma)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **_tol(dtype))
+
+
+def test_rmsnorm_grad():
+    x = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    g1 = jax.grad(lambda a: rms_ops.rmsnorm(a, s).sum())(x)
+    g2 = jax.grad(lambda a: rmsnorm_ref(a, s).sum())(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# kernels integrate with the model layer
+# ---------------------------------------------------------------------------
+
+
+def test_model_forward_with_kernels():
+    from repro import configs
+    from repro.models import model as M
+    for arch in ("qwen3-14b", "rwkv6-3b"):
+        cfg = configs.get_smoke(arch)
+        params = M.init_params(jax.random.key(0), cfg)
+        toks = jax.random.randint(jax.random.key(1), (2, 16), 0,
+                                  cfg.vocab_size)
+        base = M.forward(params, cfg, toks)
+        fast = M.forward(params, cfg, toks, use_kernel=True)
+        np.testing.assert_allclose(
+            np.asarray(fast, np.float32), np.asarray(base, np.float32),
+            atol=0.15, rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+from repro.kernels.mamba_scan import ops as ssm_ops
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,Di,S,bt",
+                         [(1, 16, 8, 4, 8), (2, 64, 32, 8, 16),
+                          (1, 128, 64, 16, 64), (2, 48, 24, 8, 16)])
+def test_selective_scan_sweep(B, T, Di, S, bt, dtype):
+    xc = jnp.asarray(rng.normal(size=(B, T, Di)), dtype)
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, T, Di))) * 0.1, dtype)
+    bm = jnp.asarray(rng.normal(size=(B, T, S)), dtype)
+    cm = jnp.asarray(rng.normal(size=(B, T, S)), dtype)
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(Di, S)), jnp.float32))
+    D = jnp.asarray(rng.normal(size=(Di,)), jnp.float32)
+    got = ssm_ops.selective_scan(xc, dt, bm, cm, A, D, bt)
+    want, _ = selective_scan_ref(xc, dt, bm, cm, A, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dtype))
+
+
+def test_selective_scan_grad():
+    B, T, Di, S = 1, 16, 8, 4
+    xc = jnp.asarray(rng.normal(size=(B, T, Di)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, T, Di))) * 0.1,
+                     jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(B, T, S)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(B, T, S)), jnp.float32)
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(Di, S)), jnp.float32))
+    D = jnp.asarray(rng.normal(size=(Di,)), jnp.float32)
+    g1 = jax.grad(lambda a: ssm_ops.selective_scan(
+        a, dt, bm, cm, A, D, 8).sum())(xc)
+    g2 = jax.grad(lambda a: selective_scan_ref(
+        a, dt, bm, cm, A, D)[0].sum())(xc)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               atol=1e-4, rtol=1e-4)
