@@ -8,12 +8,16 @@ import sys
 import time
 
 from benchmarks.common import header
+# bench_tuner first: it forces the 8-host-device XLA flag, which must be
+# set before any sibling import initializes jax
+from benchmarks import bench_tuner
 from benchmarks import (bench_allgather, bench_alltoall, bench_neighbor,
                         bench_partitioned, bench_paths,
                         bench_moe_dispatch)
 
 BENCHES = [bench_allgather, bench_alltoall, bench_neighbor,
-           bench_partitioned, bench_paths, bench_moe_dispatch]
+           bench_partitioned, bench_paths, bench_moe_dispatch,
+           bench_tuner]
 
 
 def main() -> None:

@@ -18,18 +18,18 @@ from jax.sharding import PartitionSpec as P
 from repro.core import api as mpix
 from repro.core.plan import CommGraph, build_plan, run_shardmap
 from repro.core.topology import Topology
+from repro import compat
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 4), ("pod", "data"))
 x = np.arange(8 * 4, dtype=np.float32).reshape(8, 4)
 
 # --- Listing 1 -> 2: replace the collective, pick the algorithm --------
 for algo in ("xla", "ring_rs_ag", "hierarchical", "auto"):
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(compat.shard_map(
         lambda v: mpix.mpix_allreduce(v, ("pod", "data"), algorithm=algo),
         mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(None),
         check_vma=False))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out = np.asarray(f(x))
     assert np.allclose(out, x.reshape(8, 1, 4).sum(0))
     print(f"mpix_allreduce[{algo:>13s}] ok -> {out[0][:4]}")
@@ -47,11 +47,11 @@ print(f"neighbor plan: DCN bytes {std.traffic()['dcn']} -> "
 
 values = np.stack([rng.normal(size=(4, 2)).astype(np.float32)
                    for _ in range(8)])
-g = jax.jit(jax.shard_map(                          # ... execute often
+g = jax.jit(compat.shard_map(                          # ... execute often
     lambda v: run_shardmap(plan, v, ("pod", "data")),
     mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")),
     check_vma=False))
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     recv = np.asarray(g(values.reshape(8 * 4, 2)))
 print("neighbor exchange ok, recv shape", recv.shape)
 print("quickstart OK")

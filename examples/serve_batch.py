@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.models import model as M
 from repro.serve.step import ServeOptions, make_decode_step
+from repro import compat
 
 ARCH = "qwen3-14b"          # smoke-sized variant of the qwen3 family
 BATCH, PROMPT, GEN = 8, 24, 24
@@ -25,9 +26,8 @@ BATCH, PROMPT, GEN = 8, 24, 24
 def main():
     cfg = configs.get_smoke(ARCH)
     n = jax.device_count()
-    mesh = jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = compat.make_mesh((n, 1), ("data", "model"))
+    with compat.set_mesh(mesh):
         params = M.init_params(jax.random.key(0), cfg)
         reqs = jax.random.randint(jax.random.key(1), (BATCH, PROMPT), 2,
                                   cfg.vocab_size)

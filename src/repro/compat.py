@@ -1,0 +1,62 @@
+"""Version-robust accessors for JAX APIs that moved across releases.
+
+The repo targets the current JAX surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.lax.axis_size``, ``Mesh(..., axis_types=...)``)
+but must also run on older installs (0.4.x) where those live elsewhere
+or do not exist.  Every call site goes through this module instead of
+feature-testing jax inline.
+
+  * ``axis_size(name)``   — ``jax.lax.axis_size`` or the ``psum(1, name)``
+                            trick (special-cased by jax to a static int).
+  * ``shard_map(...)``    — ``jax.shard_map`` or the ``jax.experimental``
+                            version; the ``check_vma`` kwarg maps onto the
+                            old ``check_rep``.
+  * ``make_mesh(...)``    — drops ``axis_types`` when unsupported.
+  * ``set_mesh(mesh)``    — context manager; a no-op on versions without
+                            an ambient-mesh concept (every shard_map here
+                            carries its mesh explicitly, so nothing is
+                            lost).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def axis_size(name) -> int:
+    """Static size of a manual mesh axis (callable inside shard_map)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    # psum of the literal 1 is special-cased at trace time to the static
+    # axis size (a Python int), on every jax version.
+    return jax.lax.psum(1, name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with Auto axis_types where supported."""
+    axis_names = tuple(axis_names)
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = ((jax.sharding.AxisType.Auto,)
+                                * len(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), axis_names, devices=devices,
+                         **kwargs)
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context manager (no-op where jax has none)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return contextlib.nullcontext(mesh)

@@ -40,6 +40,8 @@ import jax.numpy as jnp
 
 from repro.core.transport import _flat_rank
 
+from repro import compat
+
 
 def _axes_tuple(axis_names):
     return (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
@@ -106,7 +108,7 @@ def allgather_matmul(x: jax.Array, w: jax.Array, axis_name, *,
     names = _axes_tuple(axis_name)
     n_ranks = 1
     for a in names:
-        n_ranks *= jax.lax.axis_size(a)
+        n_ranks *= compat.axis_size(a)
     axis_arg = names if len(names) > 1 else names[0]
     rank = _flat_rank(names)
     m_local = x.shape[0]
@@ -153,7 +155,7 @@ def matmul_reduce_scatter(x: jax.Array, w: jax.Array, axis_name, *,
     names = _axes_tuple(axis_name)
     n_ranks = 1
     for a in names:
-        n_ranks *= jax.lax.axis_size(a)
+        n_ranks *= compat.axis_size(a)
     axis_arg = names if len(names) > 1 else names[0]
     rank = _flat_rank(names)
     m = x.shape[0]

@@ -4,6 +4,7 @@ publicly selectable ``algorithm=`` argument.
     y = mpix_allreduce(x, ("pod", "data"))                   # default select
     y = mpix_allreduce(x, ("pod", "data"), algorithm="hierarchical")
     y = mpix_allgather(x, "model", algorithm="bruck")
+    y = mpix_allreduce(x, "data", policy="tuned")            # empirical table
 
 All functions must be called *inside* ``shard_map`` whose manual axes
 include ``axis_names``; ``algorithm="xla"`` routes to the substrate
@@ -26,6 +27,8 @@ from repro.core.transport import ShardMapTransport, _flat_rank
 from repro.core import selector
 from repro.core.algorithms import REGISTRY
 
+from repro import compat
+
 
 def _axes_tuple(axis_names) -> tuple[str, ...]:
     return (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
@@ -39,7 +42,7 @@ def topology_from_axes(axis_names: Sequence[str]) -> Topology:
     Must be called inside shard_map (uses static axis sizes).
     """
     names = _axes_tuple(axis_names)
-    sizes = [jax.lax.axis_size(n) for n in names]
+    sizes = [compat.axis_size(n) for n in names]
     nranks = 1
     for s in sizes:
         nranks *= s
@@ -55,9 +58,30 @@ def _schedule(collective: str, algorithm: str, nranks: int,
     return REGISTRY[collective][algorithm](topo)
 
 
-def _resolve(collective: str, algorithm: str, topo: Topology, nbytes: int):
+# Selection policy used when algorithm="auto" and no per-call ``policy=``
+# is given: "fixed" (paper defaults), "model" (alpha-beta argmin) or
+# "tuned" (persisted empirical table; see repro.core.tuner).
+_DEFAULT_POLICY = "model"
+
+
+def set_default_policy(policy: str) -> None:
+    """Set the process-wide selection policy for algorithm="auto"."""
+    if policy not in selector.POLICIES:
+        raise ValueError(f"unknown selection policy {policy!r}; "
+                         f"expected one of {selector.POLICIES}")
+    global _DEFAULT_POLICY
+    _DEFAULT_POLICY = policy
+
+
+def get_default_policy() -> str:
+    return _DEFAULT_POLICY
+
+
+def _resolve(collective: str, algorithm: str, topo: Topology, nbytes: int,
+             policy: str | None = None):
     if algorithm == "auto":
-        algorithm = selector.select(collective, topo, nbytes)
+        algorithm = selector.select(collective, topo, nbytes,
+                                    policy=policy or _DEFAULT_POLICY)
     if algorithm == "xla":
         return "xla", None
     return algorithm, _schedule(collective, algorithm, topo.nranks,
@@ -76,12 +100,13 @@ def _pad_to(x: jax.Array, mult: int):
 
 
 def mpix_allgather(x: jax.Array, axis_names, *, algorithm: str = "auto",
+                   policy: str | None = None,
                    topo: Topology | None = None) -> jax.Array:
     """Tiled allgather of the local shard along its leading dim."""
     names = _axes_tuple(axis_names)
     topo = topo or topology_from_axes(names)
     algorithm, sched = _resolve("allgather", algorithm, topo,
-                                x.size * x.dtype.itemsize)
+                                x.size * x.dtype.itemsize, policy)
     if algorithm == "xla":
         return jax.lax.all_gather(x, names, tiled=True)
     n = topo.nranks
@@ -92,11 +117,12 @@ def mpix_allgather(x: jax.Array, axis_names, *, algorithm: str = "auto",
 
 
 def mpix_allreduce(x: jax.Array, axis_names, *, algorithm: str = "auto",
+                   policy: str | None = None,
                    topo: Topology | None = None) -> jax.Array:
     names = _axes_tuple(axis_names)
     topo = topo or topology_from_axes(names)
     algorithm, sched = _resolve("allreduce", algorithm, topo,
-                                x.size * x.dtype.itemsize)
+                                x.size * x.dtype.itemsize, policy)
     if algorithm == "xla":
         return jax.lax.psum(x, names)
     n = topo.nranks
@@ -107,12 +133,13 @@ def mpix_allreduce(x: jax.Array, axis_names, *, algorithm: str = "auto",
 
 def mpix_reduce_scatter(x: jax.Array, axis_names, *,
                         algorithm: str = "auto",
+                        policy: str | None = None,
                         topo: Topology | None = None) -> jax.Array:
     """Reduce along axes; scatter over the leading dim (must divide)."""
     names = _axes_tuple(axis_names)
     topo = topo or topology_from_axes(names)
     algorithm, sched = _resolve("reduce_scatter", algorithm, topo,
-                                x.size * x.dtype.itemsize)
+                                x.size * x.dtype.itemsize, policy)
     if algorithm == "xla":
         return jax.lax.psum_scatter(x, names, scatter_dimension=0,
                                     tiled=True)
@@ -124,13 +151,14 @@ def mpix_reduce_scatter(x: jax.Array, axis_names, *,
 
 
 def mpix_alltoall(x: jax.Array, axis_names, *, algorithm: str = "auto",
+                  policy: str | None = None,
                   topo: Topology | None = None) -> jax.Array:
     """Alltoall over the leading dim: in block d = data for rank d;
     out block s = data from rank s.  Leading dim must divide by nranks."""
     names = _axes_tuple(axis_names)
     topo = topo or topology_from_axes(names)
     algorithm, sched = _resolve("alltoall", algorithm, topo,
-                                x.size * x.dtype.itemsize)
+                                x.size * x.dtype.itemsize, policy)
     n = topo.nranks
     assert x.shape[0] % n == 0, (x.shape, n)
     if algorithm == "xla":
@@ -148,5 +176,6 @@ def mpix_alltoall(x: jax.Array, axis_names, *, algorithm: str = "auto",
 
 __all__ = [
     "mpix_allgather", "mpix_allreduce", "mpix_reduce_scatter",
-    "mpix_alltoall", "topology_from_axes",
+    "mpix_alltoall", "topology_from_axes", "set_default_policy",
+    "get_default_policy",
 ]

@@ -1,12 +1,17 @@
 """Default algorithm selection (paper §2.1).
 
 MPI Advance currently ships a fixed default per collective and lists a
-"more sophisticated selection process" as future work.  We implement both:
+"more sophisticated selection process" as future work.  We implement all
+three rungs of that ladder:
 
   * ``select(..., policy="fixed")``   — the paper-faithful static default.
   * ``select(..., policy="model")``   — alpha-beta-model-driven argmin over
     every registered schedule (the future-work selector), using the exact
     per-round link accounting of ``Schedule.modeled_time``.
+  * ``select(..., policy="tuned")``   — empirical: per-(collective,
+    topology, size-bucket) winners measured on the live substrate and
+    persisted by ``repro.core.tuner``, keyed by a substrate fingerprint.
+    Falls back to the model argmin when no table matches.
 
 The selection is made at trace time (static shapes), so it costs nothing
 at run time — the chosen schedule is baked into the compiled program,
@@ -38,11 +43,24 @@ _LOG_STEP = {
 }
 
 
+POLICIES = ("fixed", "model", "tuned")
+
+
 def select(collective: str, topo: Topology, nbytes: int,
-           policy: str = "model") -> str:
+           policy: str = "model", tuned_table=None) -> str:
+    if policy not in POLICIES:
+        raise ValueError(f"unknown selection policy {policy!r}; "
+                         f"expected one of {POLICIES}")
     if policy == "fixed":
         flat, hier = _FIXED[collective]
         return hier if topo.npods > 1 else flat
+    if policy == "tuned":
+        from repro.core import tuner  # local: avoid import cycle
+        name = tuner.tuned_select(collective, topo, int(nbytes),
+                                  table=tuned_table)
+        if name is not None:
+            return name
+        # no persisted table for this substrate: model argmin fallback
     return _model_select(collective, topo.nranks, topo.ranks_per_pod,
                          int(nbytes))
 

@@ -77,6 +77,17 @@ class Topology:
         base = pod * self.ranks_per_pod
         return range(base, base + self.ranks_per_pod)
 
+    # -- identity ----------------------------------------------------------
+    def fingerprint(self, device_kind: str = "model") -> str:
+        """Substrate identity key for persisted tuning tables.
+
+        ``device_kind`` names the physical substrate the timings were
+        taken on (e.g. ``"cpu"``, ``"TPU_v5e"``); the reserved kind
+        ``"model"`` marks alpha-beta-model-derived tables.
+        """
+        kind = str(device_kind).strip().replace(" ", "_").replace(":", "_")
+        return f"{kind}:n{self.nranks}:rpp{self.ranks_per_pod}"
+
     # -- link classification ----------------------------------------------
     def is_local(self, src: int, dst: int) -> bool:
         """True when (src, dst) stay inside one pod (ICI link)."""

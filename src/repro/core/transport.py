@@ -29,6 +29,8 @@ import jax.numpy as jnp
 
 from repro.core.schedule import Round, Schedule
 
+from repro import compat
+
 
 class Transport(abc.ABC):
     """Executes schedules for a fixed rank count."""
@@ -108,7 +110,7 @@ def _flat_rank(axis_names: Sequence[str]):
     """Row-major flattened rank over possibly-multiple mesh axes."""
     idx = jnp.int32(0)
     for name in axis_names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * compat.axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 

@@ -1,0 +1,423 @@
+"""Empirical autotuned algorithm selection (the paper's §2.1 future work).
+
+MPI Advance ships one fixed default per collective and names a "more
+sophisticated selection process" as future work.  This module is that
+process, done the way the collective-tuning literature (Hunold's
+performance-guideline verification; the Wickramasinghe–Lumsdaine survey)
+says it must be done: *measured*, per (collective, topology, size
+bucket), with the resulting table checked against classic performance
+guidelines and persisted for reuse.
+
+Pipeline:
+
+  1. ``tune(topo)`` times every registered ``Schedule`` (plus the raw
+     XLA substrate) end-to-end through the ``mpix_*`` API under ``jit``
+     on the live device mesh — wall clock, min over repeats.  With fewer
+     devices than ranks it falls back to the alpha-beta
+     ``Schedule.modeled_time`` so a table always exists.
+  2. ``verify_guidelines`` checks the table against self-consistency
+     guidelines (allreduce <= reduce_scatter + allgather; per-algorithm
+     monotonicity in message size; specialized <= generic on multi-pod
+     topologies) and records violations *in* the table — a violated
+     guideline is a finding about the substrate, not an error.
+  3. ``save_table``/``load_table`` persist winners as JSON keyed by a
+     substrate fingerprint (device kind, nranks, ranks_per_pod), so
+     ``selector.select(..., policy="tuned")`` is a pure lookup at trace
+     time — zero run-time cost, like every other selection policy.
+
+Cache location: ``$REPRO_TUNER_CACHE`` or
+``~/.cache/repro/tuned_collectives.json``.
+
+Caveat (multi-process SPMD): the winner is resolved from the local
+cache file at trace time.  All processes of one job must see the same
+cache file (shared filesystem, or ship the table with the job) —
+otherwise two processes can bake different algorithms into the same
+collective and deadlock.  Tune once, distribute the table, then launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+from repro import compat
+from repro.core.topology import Topology
+
+COLLECTIVES = ("allgather", "allreduce", "reduce_scatter", "alltoall")
+DEFAULT_SIZES = (1 << 10, 1 << 14, 1 << 18, 1 << 22)   # bytes per rank
+_AXIS = "tune"          # mesh axis name used for measurement runs
+_ELEM = 4               # measurement payloads are float32
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get("REPRO_TUNER_CACHE")
+    if env:
+        return Path(env).expanduser()
+    return Path("~/.cache/repro/tuned_collectives.json").expanduser()
+
+
+def size_bucket(nbytes: int) -> int:
+    """log2 size bucket: bucket b covers (2**(b-1), 2**b] bytes."""
+    return max(0, int(max(1, nbytes) - 1).bit_length())
+
+
+def substrate_fingerprint(topo: Topology, *, force_model: bool = False) -> str:
+    """Fingerprint of what ``tune`` would measure on right now."""
+    kind = "model"
+    if not force_model and jax.device_count() >= topo.nranks:
+        kind = jax.devices()[0].device_kind
+    return topo.fingerprint(kind)
+
+
+# ---------------------------------------------------------------------------
+# table
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TunedTable:
+    """Per-(collective, size-bucket) winners for one substrate.
+
+    entries[collective][str(bucket)] = {
+        "best": name, "nbytes": probed_size, "times": {name: seconds}}
+    """
+
+    fingerprint: str
+    source: str                       # "measured" | "model"
+    entries: dict
+    violations: list = dataclasses.field(default_factory=list)
+
+    def lookup(self, collective: str, nbytes: int) -> str | None:
+        """Winner for the bucket nearest to ``nbytes`` (None if absent)."""
+        per = self.entries.get(collective)
+        if not per:
+            return None
+        want = size_bucket(nbytes)
+        bucket = min(per, key=lambda b: abs(int(b) - want))
+        return per[bucket]["best"]
+
+    def time_of(self, collective: str, nbytes: int,
+                algorithm: str) -> float | None:
+        per = self.entries.get(collective)
+        if not per:
+            return None
+        want = size_bucket(nbytes)
+        bucket = min(per, key=lambda b: abs(int(b) - want))
+        return per[bucket]["times"].get(algorithm)
+
+    def to_dict(self) -> dict:
+        return {"fingerprint": self.fingerprint, "source": self.source,
+                "entries": self.entries, "violations": self.violations}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TunedTable":
+        return cls(fingerprint=d["fingerprint"], source=d["source"],
+                   entries=d["entries"],
+                   violations=list(d.get("violations", [])))
+
+
+def save_table(table: TunedTable, path: str | Path | None = None) -> Path:
+    """Merge ``table`` into the fingerprint-keyed JSON cache file."""
+    path = Path(path) if path is not None else default_cache_path()
+    blob = {}
+    if path.exists():
+        try:
+            blob = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            blob = {}
+    blob[table.fingerprint] = table.to_dict()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    # pid-unique tmp + atomic replace guards against torn writes and
+    # cross-process tmp collisions (concurrent writers still last-win
+    # on the whole file — it is a cache, re-tuning is always safe)
+    tmp = path.with_suffix(f".{os.getpid()}.tmp")
+    tmp.write_text(json.dumps(blob, indent=1, sort_keys=True))
+    tmp.replace(path)
+    _CACHE[table.fingerprint] = table
+    return path
+
+
+def load_table(fingerprint: str,
+               path: str | Path | None = None) -> TunedTable | None:
+    cached = _CACHE.get(fingerprint)
+    if cached is not None:
+        return None if cached is _MISS else cached
+    path = Path(path) if path is not None else default_cache_path()
+    blob = None
+    if path.exists():
+        try:
+            blob = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            blob = None
+    if blob is None or fingerprint not in blob:
+        # negative-cache the miss: tuned-policy selection on an untuned
+        # substrate must not re-read the file per collective per trace
+        _CACHE[fingerprint] = _MISS
+        return None
+    table = TunedTable.from_dict(blob[fingerprint])
+    _CACHE[fingerprint] = table
+    return table
+
+
+_MISS = object()
+_CACHE: dict[str, object] = {}
+
+
+def clear_cache() -> None:
+    """Drop the in-process table cache (tests; after cache-file edits)."""
+    _CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+
+def _probe_spec(collective: str, topo: Topology, nbytes: int):
+    """(local_rows, out_is_sharded) for a ~nbytes-per-rank payload."""
+    n = topo.nranks
+    elems = max(1, nbytes // _ELEM)
+    if collective in ("allgather", "allreduce"):
+        return elems, False
+    # reduce_scatter / alltoall need a leading dim divisible by nranks
+    return n * max(1, elems // n), True
+
+
+def _measure(collective: str, algorithm: str, topo: Topology, nbytes: int,
+             repeats: int) -> float:
+    """Wall clock of one mpix collective under jit on the live mesh."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core import api
+
+    n = topo.nranks
+    mesh = compat.make_mesh((n,), (_AXIS,), devices=jax.devices()[:n])
+    rows, sharded_out = _probe_spec(collective, topo, nbytes)
+    fn = getattr(api, f"mpix_{collective}")
+    body = lambda v: fn(v, _AXIS, algorithm=algorithm, topo=topo)
+    f = jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=P(_AXIS),
+        out_specs=P(_AXIS) if sharded_out else P(None), check_vma=False))
+    x = np.ones((n * rows,), np.float32)
+    jax.block_until_ready(f(x))            # compile + warm the caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(x))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _modeled(sched, topo: Topology, nbytes: int) -> float:
+    block = max(1, nbytes // max(1, sched.num_blocks))
+    return sched.modeled_time(topo, block)
+
+
+def tune(topo: Topology, *, collectives=COLLECTIVES, sizes=DEFAULT_SIZES,
+         repeats: int = 3, include_xla: bool = True,
+         force_model: bool = False, tol: float = 1.10) -> TunedTable:
+    """Time every candidate per (collective, size bucket); return the table.
+
+    Measures wall clock on the live device mesh when the host has at
+    least ``topo.nranks`` devices, else falls back to the alpha-beta
+    model (and records ``source="model"`` so the fingerprint can never
+    collide with a measured table).
+    """
+    from repro.core.algorithms import REGISTRY
+
+    measured = (not force_model) and jax.device_count() >= topo.nranks
+    entries: dict = {}
+    for coll in collectives:
+        candidates = {}
+        for name, builder in REGISTRY[coll].items():
+            try:
+                candidates[name] = builder(topo)
+            except AssertionError:       # e.g. power-of-2-only variants
+                continue
+        per: dict = {}
+        for nbytes in sizes:
+            times: dict = {}
+            for name, sched in candidates.items():
+                if measured:
+                    times[name] = _measure(coll, name, topo, int(nbytes),
+                                           repeats)
+                else:
+                    times[name] = _modeled(sched, topo, int(nbytes))
+            if measured and include_xla:
+                # the substrate's own lowering — MPI Advance's "system MPI"
+                times["xla"] = _measure(coll, "xla", topo, int(nbytes),
+                                        repeats)
+            assert times, (coll, nbytes)
+            per[str(size_bucket(int(nbytes)))] = {
+                "best": min(times, key=times.get),
+                "nbytes": int(nbytes),
+                "times": {k: float(v) for k, v in times.items()},
+            }
+        entries[coll] = per
+    table = TunedTable(
+        fingerprint=substrate_fingerprint(topo, force_model=force_model),
+        source="measured" if measured else "model",
+        entries=entries)
+    table.violations = verify_guidelines(table, topo, tol=tol)
+    return table
+
+
+# ---------------------------------------------------------------------------
+# performance guidelines (Hunold-style self-consistency checks)
+# ---------------------------------------------------------------------------
+
+
+def verify_guidelines(table: TunedTable, topo: Topology | None = None,
+                      *, tol: float = 1.10) -> list:
+    """Return human-readable violations of classic performance guidelines.
+
+    Checked (each with ``tol`` relative slack):
+      * composition:   allreduce(s) <= reduce_scatter(s) + allgather(s)
+      * monotonicity:  per algorithm, time never decreases with size
+      * specialized <= generic: on multi-pod topologies the
+        locality-aware ``hierarchical`` variant should not lose to the
+        flat default for the largest probed bucket
+    """
+    out: list = []
+    e = table.entries
+
+    def best(coll, bucket):
+        rec = e.get(coll, {}).get(bucket)
+        return rec["times"][rec["best"]] if rec else None
+
+    # composition: allreduce <= reduce_scatter + allgather, per bucket
+    shared = (set(e.get("allreduce", {}))
+              & set(e.get("reduce_scatter", {}))
+              & set(e.get("allgather", {})))
+    for b in sorted(shared, key=int):
+        ar, rs, ag = (best("allreduce", b), best("reduce_scatter", b),
+                      best("allgather", b))
+        if ar is not None and ar > tol * (rs + ag):
+            out.append(
+                f"allreduce>rs+ag @bucket {b}: {ar:.3e} > "
+                f"{rs:.3e}+{ag:.3e} (guideline: composed implementation "
+                f"bounds the specialized one)")
+
+    # monotonicity in message size, per (collective, algorithm)
+    for coll, per in e.items():
+        buckets = sorted(per, key=int)
+        for lo, hi in zip(buckets, buckets[1:]):
+            for name, t_lo in per[lo]["times"].items():
+                t_hi = per[hi]["times"].get(name)
+                if t_hi is not None and t_lo > tol * t_hi:
+                    out.append(
+                        f"{coll}.{name} non-monotone: bucket {lo} "
+                        f"({t_lo:.3e}s) > bucket {hi} ({t_hi:.3e}s)")
+
+    # specialized <= generic on multi-pod substrates (largest bucket)
+    if topo is not None and topo.npods > 1:
+        from repro.core.selector import _FIXED
+        for coll, per in e.items():
+            if not per or coll not in _FIXED:
+                continue
+            b = max(per, key=int)
+            times = per[b]["times"]
+            flat_default = _FIXED[coll][0]
+            if ("hierarchical" in times and flat_default in times
+                    and times["hierarchical"] > tol * times[flat_default]):
+                out.append(
+                    f"{coll}.hierarchical slower than flat "
+                    f"{flat_default} @bucket {b} on multi-pod topo "
+                    f"({times['hierarchical']:.3e} > "
+                    f"{times[flat_default]:.3e})")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# selection entry point (used by selector.select(policy="tuned"))
+# ---------------------------------------------------------------------------
+
+
+def tuned_select(collective: str, topo: Topology, nbytes: int,
+                 table: TunedTable | None = None,
+                 path: str | Path | None = None) -> str | None:
+    """Winner from the persisted table, or None when no table applies.
+
+    Tries the measured-substrate fingerprint first, then the model
+    fingerprint.  The winner is validated against the live registry (a
+    stale table naming a removed algorithm is ignored).
+    """
+    if table is None:
+        for fp in (substrate_fingerprint(topo),
+                   topo.fingerprint("model")):
+            table = load_table(fp, path=path)
+            if table is not None:
+                break
+    if table is None:
+        return None
+    name = table.lookup(collective, nbytes)
+    if name is None or name == "xla":
+        return name
+    # registry-membership check only: the fingerprint guarantees the
+    # table's topology matches the query, so the winner built for it at
+    # tuning time — only a renamed/removed algorithm can be stale here
+    from repro.core.algorithms import REGISTRY
+    if name not in REGISTRY.get(collective, {}):
+        return None
+    return name
+
+
+def ensure_table(topo: Topology, *, path: str | Path | None = None,
+                 **tune_kwargs) -> TunedTable:
+    """Load the table for the current substrate, tuning once if missing."""
+    table = load_table(substrate_fingerprint(topo), path=path)
+    if table is None:
+        table = tune(topo, **tune_kwargs)
+        save_table(table, path=path)
+    return table
+
+
+# ---------------------------------------------------------------------------
+# CLI: PYTHONPATH=src python -m repro.core.tuner --nranks 8 --ranks-per-pod 4
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="tune collective algorithm selection for one topology "
+                    "(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                    "before running to measure on N host devices)")
+    ap.add_argument("--nranks", type=int, default=8)
+    ap.add_argument("--ranks-per-pod", type=int, default=None)
+    ap.add_argument("--sizes", default=None,
+                    help="comma list of per-rank byte counts")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--model", action="store_true",
+                    help="force the alpha-beta model (no devices needed)")
+    ap.add_argument("--out", default=None, help="cache file to write")
+    args = ap.parse_args(argv)
+
+    topo = Topology(nranks=args.nranks,
+                    ranks_per_pod=args.ranks_per_pod or args.nranks)
+    sizes = (tuple(int(s) for s in args.sizes.split(","))
+             if args.sizes else DEFAULT_SIZES)
+    table = tune(topo, sizes=sizes, repeats=args.repeats,
+                 force_model=args.model)
+    path = save_table(table, path=args.out)
+    print(f"fingerprint {table.fingerprint} ({table.source}) -> {path}")
+    for coll, per in table.entries.items():
+        for b in sorted(per, key=int):
+            rec = per[b]
+            print(f"  {coll:15s} bucket {b:>3s} ({rec['nbytes']:>9d}B) "
+                  f"-> {rec['best']:28s} "
+                  f"{rec['times'][rec['best']] * 1e6:10.1f} us")
+    for v in table.violations:
+        print(f"  GUIDELINE VIOLATION: {v}")
+    if not table.violations:
+        print("  all performance guidelines hold")
+
+
+if __name__ == "__main__":
+    main()

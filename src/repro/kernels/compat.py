@@ -1,0 +1,15 @@
+"""Version-robust Pallas TPU accessors.
+
+``pallas.tpu`` renamed ``TPUCompilerParams`` to ``CompilerParams``; the
+kernels build their params through here so they lower on either jax.
+"""
+from __future__ import annotations
+
+
+def tpu_compiler_params(**kwargs):
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -17,6 +17,7 @@ import time
 
 import jax
 
+from repro import compat
 from repro.configs import ARCHS, get_config
 from repro.configs.shapes import SHAPES, runnable
 from repro.launch.mesh import make_production_mesh
@@ -123,7 +124,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if kind == "train":
             opts = TrainOptions(**(train_overrides or {}))
             from repro.train.step import state_specs

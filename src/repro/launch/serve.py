@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import compat, configs
+from repro.core import api as mpix_api
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 from repro.serve.step import ServeOptions, make_decode_step
@@ -27,19 +28,24 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--select-policy", default="model",
+                    choices=["fixed", "model", "tuned"],
+                    help="algorithm selection policy for algorithm="
+                         "'auto' collectives (tuned reads the persisted "
+                         "tuner table; see repro.core.tuner)")
     args = ap.parse_args(argv)
 
+    mpix_api.set_default_policy(args.select_policy)
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
     if args.mesh == "local":
         n = jax.device_count()
-        mesh = jax.make_mesh((n, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((n, 1), ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
 
     max_len = args.prompt_len + args.gen
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = M.init_params(jax.random.key(0), cfg)
         prompts = jax.random.randint(
             jax.random.key(1), (args.batch, args.prompt_len), 2,

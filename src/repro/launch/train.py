@@ -17,7 +17,8 @@ import time
 import jax
 import numpy as np
 
-from repro import configs
+from repro import compat, configs
+from repro.core import api as mpix_api
 from repro.data import DataPipeline, PipelineConfig
 from repro.launch.mesh import make_production_mesh
 from repro.runtime import FaultTolerantLoop, PreemptionSignal
@@ -30,8 +31,7 @@ def build(args):
            else configs.get_config(args.arch))
     if args.mesh == "local":
         n = jax.device_count()
-        mesh = jax.make_mesh((n, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((n, 1), ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
         from repro.models.common import set_shard_mesh
@@ -58,6 +58,11 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--dp-mode", default="fsdp")
     ap.add_argument("--dp-algorithm", default="xla")
+    ap.add_argument("--select-policy", default="model",
+                    choices=["fixed", "model", "tuned"],
+                    help="algorithm selection policy for algorithm="
+                         "'auto' collectives (tuned reads the persisted "
+                         "tuner table; see repro.core.tuner)")
     ap.add_argument("--grad-buckets", type=int, default=1)
     ap.add_argument("--moe-mode", default="dropless")
     ap.add_argument("--ep-alltoall", default="xla")
@@ -66,11 +71,12 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
+    mpix_api.set_default_policy(args.select_policy)
     cfg, mesh, opts = build(args)
     pipe = DataPipeline(PipelineConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.batch))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step_fn = jax.jit(make_train_step(cfg, mesh, opts))
         state = init_train_state(jax.random.key(0), cfg, opts)
 

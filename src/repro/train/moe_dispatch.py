@@ -32,6 +32,8 @@ from repro.core.transport import _flat_rank
 from repro.models import mlp, moe
 from repro.models.config import MoEConfig
 
+from repro import compat
+
 
 @dataclasses.dataclass(frozen=True)
 class EPOptions:
@@ -68,7 +70,7 @@ def make_moe_dispatch(mesh, opts: EPOptions, act: str = "silu"):
         rp = {k: p[k] for k in ("router", "router_bias") if k in p}
         body = functools.partial(_dispatch_body, cfg=cfg, ep=ep,
                                  opts=opts, act=act)
-        shard = jax.shard_map(
+        shard = compat.shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), rp),   # router params
                       P(ep, None, None),         # w_gate  [E, d, f]
@@ -87,11 +89,11 @@ def make_moe_dispatch(mesh, opts: EPOptions, act: str = "silu"):
 def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
                    ep, opts: EPOptions, act):
     B, S, d = x.shape
-    M = jax.lax.axis_size("model")
+    M = compat.axis_size("model")
     m = jax.lax.axis_index("model")
     N_ep = 1
     for a in ep:
-        N_ep *= jax.lax.axis_size(a)
+        N_ep *= compat.axis_size(a)
     E, K = cfg.n_experts, cfg.top_k
     E_loc = E // N_ep
     T_total = B * S

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.models import model as M
 from repro.models import moe as moe_mod
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm
@@ -147,7 +148,7 @@ def make_train_step(cfg, mesh, opts: TrainOptions) -> Callable:
             return lval, grads, residual
 
         residual = state.get("ef_residual")
-        shard = jax.shard_map(
+        shard = compat.shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), state["params"]),
                       (jax.tree.map(lambda _: P(), residual)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from repro.core import api as mpix
 from repro.optim.compress import compress_int8, decompress_int8
 
+from repro import compat
+
 
 def _flatten(tree):
     leaves, tdef = jax.tree.flatten(tree)
@@ -52,7 +54,7 @@ def dp_allreduce(grads, axis_names, *, algorithm="xla", buckets=1,
     if denom is None:
         denom = 1
         for a in names:
-            denom *= jax.lax.axis_size(a)
+            denom *= compat.axis_size(a)
     flat, meta = _flatten(grads)
     per = -(-flat.size // max(1, buckets))
     pad = per * max(1, buckets) - flat.size
@@ -77,9 +79,9 @@ def dp_allreduce_compressed(grads, residual, *, intra_algorithm="xla",
       4. divide by ``denom`` (global live-token count).
     Returns (synced grads, new residual).
     """
-    Q = jax.lax.axis_size("pod")
+    Q = compat.axis_size("pod")
     if denom is None:
-        denom = Q * jax.lax.axis_size("data")
+        denom = Q * compat.axis_size("data")
     flat, meta = _flatten(grads)
     flat = mpix.mpix_allreduce(flat, "data", algorithm=intra_algorithm)
     if residual is None:

@@ -1,0 +1,74 @@
+"""Deterministic fallback for the tiny hypothesis surface these tests use.
+
+The real property-based runner comes from the ``dev`` extra
+(``pip install -e .[dev]``).  When hypothesis is absent the test modules
+fall back to this stub, which draws a fixed, seeded sample of examples —
+strictly weaker than hypothesis (no shrinking, no example database) but
+it keeps the whole property suite running in minimal environments.
+
+Implemented: ``given`` (keyword strategies only), ``settings``
+(max_examples, deadline ignored), ``strategies.sampled_from`` and
+``strategies.integers``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+# Keep CI time bounded: the stub is a smoke-sample, not a search.
+_MAX_EXAMPLES_CAP = 12
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _sampled_from(items):
+    items = list(items)
+    assert items
+    return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def _integers(min_value=0, max_value=1 << 31):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+class _Strategies:
+    sampled_from = staticmethod(_sampled_from)
+    integers = staticmethod(_integers)
+
+
+st = _Strategies()
+strategies = st
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    for name, s in strats.items():
+        assert isinstance(s, _Strategy), (name, s)
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_stub_max_examples", 20),
+                    _MAX_EXAMPLES_CAP)
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest must not see the strategy parameters as fixtures
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -10,6 +10,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.plan import CommGraph, build_plan, run_sim, run_shardmap
 from repro.core.topology import Topology
+from repro import compat
 
 N, N_LOCAL, FEAT = 8, 6, 3
 rng = np.random.default_rng(42)
@@ -19,8 +20,8 @@ values = [rng.normal(size=(N_LOCAL, FEAT)).astype(np.float32)
           for _ in range(N)]
 
 MESHES = {
-    "flat": (jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)), ("data",), 8),
-    "pods": (jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,) * 2), ("pod", "data"), 4),
+    "flat": (compat.make_mesh((8,), ("data",)), ("data",), 8),
+    "pods": (compat.make_mesh((2, 4), ("pod", "data")), ("pod", "data"), 4),
 }
 
 failures = []
@@ -30,12 +31,12 @@ for mesh_name, (mesh, axes, rpp) in MESHES.items():
         plan = build_plan(graph, topo, aggregate=aggregate)
         want = run_sim(plan, values)
 
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(compat.shard_map(
             lambda v: run_shardmap(plan, v, axes),
             mesh=mesh, in_specs=P(tuple(axes)), out_specs=P(tuple(axes)),
             check_vma=False))
         stacked = np.stack(values).reshape((N * N_LOCAL, FEAT))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             got = np.asarray(f(stacked))
         got = got.reshape(N, -1, FEAT)
         ok = all(np.allclose(got[r, : plan.recv_sizes[r]], want[r],

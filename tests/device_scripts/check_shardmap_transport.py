@@ -14,14 +14,13 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import api
+from repro import compat
 
 N = 8
 MESHES = {
-    "flat": (jax.make_mesh((8,), ("data",),
-                           axis_types=(jax.sharding.AxisType.Auto,)),
+    "flat": (compat.make_mesh((8,), ("data",)),
              ("data",)),
-    "pods": (jax.make_mesh((2, 4), ("pod", "data"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2),
+    "pods": (compat.make_mesh((2, 4), ("pod", "data")),
              ("pod", "data")),
 }
 
@@ -42,37 +41,37 @@ def check(mesh_name, mesh, axes, coll, algo):
     spec = P(tuple(axes))
     if coll == "allgather":
         x = rng.normal(size=(N * 4, 6)).astype(np.float32)
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(compat.shard_map(
             lambda v: api.mpix_allgather(v, axes, algorithm=algo),
             mesh=mesh, in_specs=spec, out_specs=P(None), check_vma=False))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             got = np.asarray(f(x))
         return np.allclose(got, x)
     if coll == "allreduce":
         x = rng.normal(size=(N * 4, 6)).astype(np.float32)
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(compat.shard_map(
             lambda v: api.mpix_allreduce(v, axes, algorithm=algo),
             mesh=mesh, in_specs=spec, out_specs=P(None), check_vma=False))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             got = np.asarray(f(x))
         return np.allclose(got, x.reshape(N, 4, 6).sum(0), atol=1e-4)
     if coll == "reduce_scatter":
         # distinct per-rank contributions: feed a sharded [N*N, 6] whose
         # rank-r shard is that rank's full N-row contribution
         x = rng.normal(size=(N * N, 6)).astype(np.float32)
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(compat.shard_map(
             lambda v: api.mpix_reduce_scatter(v, axes, algorithm=algo),
             mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             got = np.asarray(f(x))  # rank r returns reduced row r -> [N, 6]
         want = x.reshape(N, N, 6).sum(0)  # row r fully reduced
         return np.allclose(got, want, atol=1e-4)
     if coll == "alltoall":
         x = rng.normal(size=(N * N, 6)).astype(np.float32)
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(compat.shard_map(
             lambda v: api.mpix_alltoall(v, axes, algorithm=algo),
             mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             got = np.asarray(f(x))
         want = x.reshape(N, N, 6).swapaxes(0, 1).reshape(N * N, 6)
         return np.allclose(got, want, atol=1e-5)

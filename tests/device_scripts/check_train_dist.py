@@ -21,6 +21,7 @@ from repro.data import DataPipeline, PipelineConfig
 from repro.models import moe as moe_mod
 from repro.train.moe_dispatch import EPOptions, make_moe_dispatch
 from repro.train.step import TrainOptions, init_train_state, make_train_step
+from repro import compat
 
 failures = []
 
@@ -31,10 +32,8 @@ def check(name, ok):
         failures.append(name)
 
 
-AUTO = jax.sharding.AxisType.Auto
-mesh_flat = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AUTO,) * 2)
-mesh_pods = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                          axis_types=(AUTO,) * 3)
+mesh_flat = compat.make_mesh((2, 4), ("data", "model"))
+mesh_pods = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 # ---------------------------------------------------------------------------
 # 1. EP dispatch == dense oracle
@@ -52,7 +51,7 @@ for mesh in (mesh_flat, mesh_pods):
             mesh, EPOptions(alltoall=algo,
                             capacity_factor=float(mcfg.n_experts)),
             cfg.mlp_act)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             got = np.asarray(jax.jit(lambda pp, xx: disp(pp, mcfg, xx))(
                 p, x), np.float32)
         ok = np.allclose(got, want, atol=2e-2, rtol=2e-2)
@@ -66,7 +65,7 @@ pipe = DataPipeline(PipelineConfig(vocab_size=cfg.vocab_size, seq_len=16,
                                    global_batch=8, seed=3))
 batch = pipe.batch(0)
 
-mesh1 = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AUTO,) * 2)
+mesh1 = compat.make_mesh((1, 1), ("data", "model"))
 opts_ref = TrainOptions(dp_mode="fsdp", remat=False, peak_lr=1e-3,
                         warmup_steps=1, total_steps=100)
 state0 = init_train_state(jax.random.key(0), cfg, opts_ref)
@@ -83,7 +82,7 @@ for mesh, algos in ((mesh_flat, ["xla", "ring_rs_ag", "hierarchical"]),
                             remat=False, peak_lr=1e-3, warmup_steps=1,
                             total_steps=100)
         step = make_train_step(cfg, mesh, opts)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             bsh = jax.device_put(batch, NamedSharding(mesh, P(d_axes)))
             st = jax.device_put(state0)
             new, m = jax.jit(step)(st, bsh)
@@ -96,7 +95,7 @@ for mesh, algos in ((mesh_flat, ["xla", "ring_rs_ag", "hierarchical"]),
 opts = TrainOptions(dp_mode="explicit", dp_algorithm="ring_rs_ag",
                     grad_buckets=4, remat=False, peak_lr=1e-3,
                     warmup_steps=1, total_steps=100)
-with jax.set_mesh(mesh_flat):
+with compat.set_mesh(mesh_flat):
     bsh = jax.device_put(batch, NamedSharding(mesh_flat, P(("data",))))
     new, m = jax.jit(make_train_step(cfg, mesh_flat, opts))(
         jax.device_put(state0), bsh)
@@ -109,7 +108,7 @@ check("bucketed explicit DP == 1-dev",
 opts = TrainOptions(dp_mode="explicit", compress_dcn=True, remat=False,
                     peak_lr=1e-3, warmup_steps=1, total_steps=100)
 state_c = init_train_state(jax.random.key(0), cfg, opts)
-with jax.set_mesh(mesh_pods):
+with compat.set_mesh(mesh_pods):
     bsh = jax.device_put(batch,
                          NamedSharding(mesh_pods, P(("pod", "data"))))
     new, m = jax.jit(make_train_step(cfg, mesh_pods, opts))(
@@ -122,7 +121,7 @@ check("compressed DCN sync finite + close",
 from repro.train.step import jit_train_step
 opts = TrainOptions(dp_mode="fsdp", remat=True, peak_lr=1e-3,
                     warmup_steps=1, total_steps=100)
-with jax.set_mesh(mesh_flat):
+with compat.set_mesh(mesh_flat):
     bspec = jax.tree.map(lambda _: P(("data",)), batch)
     step, sspec = jit_train_step(cfg, mesh_flat, opts,
                                  state0, bspec)

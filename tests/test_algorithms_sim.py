@@ -6,7 +6,10 @@ byte accounting the locality claims rest on.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra not installed: seeded fallback
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.topology import Topology, flat_topology
 from repro.core.transport import SimTransport

@@ -7,7 +7,10 @@ to one per pod-pair stripe).
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra not installed: seeded fallback
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.plan import CommGraph, build_plan, run_sim
 from repro.core.topology import Topology

@@ -3,7 +3,10 @@ atomic/async checkpointing, fault-tolerant loop, straggler rebalance,
 elastic remesh."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra not installed: seeded fallback
+    from _hypothesis_stub import given, settings, st
 
 import jax
 import jax.numpy as jnp

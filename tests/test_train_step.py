@@ -11,11 +11,11 @@ from repro.models import moe as moe_mod
 from repro.train.step import TrainOptions, init_train_state, make_train_step
 
 import pytest
+from repro import compat
 
 
 def _mesh1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def test_loss_decreases_smollm():

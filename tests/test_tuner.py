@@ -1,0 +1,226 @@
+"""Unit + property tests for the empirical selector (repro.core.tuner)
+and the policy plumbing in selector/api."""
+import copy
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra not installed: seeded fallback
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import api, selector, tuner
+from repro.core.algorithms import REGISTRY
+from repro.core.topology import Topology, flat_topology
+
+TOPO = Topology(nranks=8, ranks_per_pod=4)
+SIZES = (1 << 10, 1 << 14, 1 << 18, 1 << 22)
+
+
+@pytest.fixture(autouse=True)
+def _isolate_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path / "cache.json"))
+    tuner.clear_cache()
+    yield
+    tuner.clear_cache()
+
+
+@pytest.fixture(scope="module")
+def model_table():
+    return tuner.tune(TOPO, sizes=SIZES, force_model=True)
+
+
+# ---------------------------------------------------------------------------
+# buckets + fingerprints
+# ---------------------------------------------------------------------------
+
+
+def test_size_bucket_boundaries():
+    assert tuner.size_bucket(1) == 0
+    assert tuner.size_bucket(1024) == 10
+    assert tuner.size_bucket(1025) == 11
+    assert tuner.size_bucket(0) == 0      # degenerate payloads clamp
+
+
+@settings(max_examples=30, deadline=None)
+@given(a=st.integers(1, 1 << 30), b=st.integers(1, 1 << 30))
+def test_size_bucket_monotone(a, b):
+    lo, hi = min(a, b), max(a, b)
+    assert tuner.size_bucket(lo) <= tuner.size_bucket(hi)
+
+
+def test_fingerprint_distinguishes_topologies():
+    fps = {Topology(8, 4).fingerprint("cpu"),
+           Topology(8, 8).fingerprint("cpu"),
+           Topology(16, 4).fingerprint("cpu"),
+           Topology(8, 4).fingerprint("TPU v5e")}
+    assert len(fps) == 4
+    assert Topology(8, 4).fingerprint("TPU v5e") == "TPU_v5e:n8:rpp4"
+
+
+# ---------------------------------------------------------------------------
+# table round-trip through the JSON cache
+# ---------------------------------------------------------------------------
+
+
+def test_table_roundtrip(tmp_path, model_table):
+    path = tmp_path / "tuned.json"
+    tuner.save_table(model_table, path=path)
+    tuner.clear_cache()
+    loaded = tuner.load_table(model_table.fingerprint, path=path)
+    assert loaded is not None
+    assert loaded.fingerprint == model_table.fingerprint
+    assert loaded.source == "model"
+    assert loaded.entries == model_table.entries
+    assert loaded.violations == model_table.violations
+
+
+def test_save_merges_fingerprints(tmp_path):
+    path = tmp_path / "tuned.json"
+    t1 = tuner.tune(TOPO, sizes=(1024,), force_model=True)
+    t2 = tuner.tune(flat_topology(16), sizes=(1024,), force_model=True)
+    tuner.save_table(t1, path=path)
+    tuner.save_table(t2, path=path)
+    tuner.clear_cache()
+    assert tuner.load_table(t1.fingerprint, path=path) is not None
+    assert tuner.load_table(t2.fingerprint, path=path) is not None
+
+
+def test_load_missing_and_corrupt(tmp_path):
+    assert tuner.load_table("cpu:n8:rpp4", path=tmp_path / "nope.json") \
+        is None
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert tuner.load_table("cpu:n8:rpp4", path=bad) is None
+
+
+# ---------------------------------------------------------------------------
+# tuned selection semantics
+# ---------------------------------------------------------------------------
+
+
+def test_tuned_never_worse_than_fixed(model_table):
+    """The tuned winner's probed time never exceeds the fixed default's
+    for the same bucket (argmin over a candidate set containing it)."""
+    for coll in tuner.COLLECTIVES:
+        for nbytes in SIZES:
+            fixed = selector.select(coll, TOPO, nbytes, policy="fixed")
+            tuned = selector.select(coll, TOPO, nbytes, policy="tuned",
+                                    tuned_table=model_table)
+            t_tuned = model_table.time_of(coll, nbytes, tuned)
+            t_fixed = model_table.time_of(coll, nbytes, fixed)
+            assert t_fixed is not None, (coll, nbytes, fixed)
+            assert t_tuned <= t_fixed, (coll, nbytes, tuned, fixed)
+
+
+def test_tuned_winners_are_executable(model_table):
+    for coll, per in model_table.entries.items():
+        for rec in per.values():
+            name = rec["best"]
+            assert name == "xla" or name in REGISTRY[coll]
+            if name != "xla":
+                REGISTRY[coll][name](TOPO)   # builds without assertion
+
+
+def test_lookup_nearest_bucket(model_table):
+    per = model_table.entries["allgather"]
+    lo_bucket = min(per, key=int)
+    # far below every probed size -> clamps to the smallest bucket
+    assert model_table.lookup("allgather", 1) == per[lo_bucket]["best"]
+    hi_bucket = max(per, key=int)
+    assert model_table.lookup("allgather", 1 << 40) \
+        == per[hi_bucket]["best"]
+    assert model_table.lookup("not_a_collective", 1024) is None
+
+
+@settings(max_examples=30, deadline=None)
+@given(nbytes=st.integers(1, 1 << 28),
+       coll=st.sampled_from(list(tuner.COLLECTIVES)))
+def test_tuned_select_total(model_table, coll, nbytes):
+    """policy="tuned" always returns a runnable algorithm name."""
+    name = tuner.tuned_select(coll, TOPO, nbytes, table=model_table)
+    assert name is not None
+    assert name == "xla" or name in REGISTRY[coll]
+
+
+def test_stale_table_entry_falls_back_to_model(model_table):
+    stale = copy.deepcopy(model_table)
+    for per in stale.entries.values():
+        for rec in per.values():
+            rec["best"] = "algorithm_deleted_in_v2"
+    got = selector.select("allgather", TOPO, 1024, policy="tuned",
+                          tuned_table=stale)
+    assert got == selector.select("allgather", TOPO, 1024, policy="model")
+
+
+def test_tuned_without_table_matches_model():
+    topo = Topology(nranks=12, ranks_per_pod=3)   # never tuned
+    for coll in tuner.COLLECTIVES:
+        assert selector.select(coll, topo, 4096, policy="tuned") \
+            == selector.select(coll, topo, 4096, policy="model")
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        selector.select("allgather", TOPO, 1024, policy="fastest")
+    with pytest.raises(ValueError):
+        api.set_default_policy("fastest")
+
+
+def test_api_default_policy_roundtrip():
+    assert api.get_default_policy() == "model"
+    try:
+        api.set_default_policy("tuned")
+        assert api.get_default_policy() == "tuned"
+    finally:
+        api.set_default_policy("model")
+
+
+# ---------------------------------------------------------------------------
+# performance-guideline verification
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_table(times):
+    """One-bucket table with given {coll: {alg: t}} at bucket 10."""
+    entries = {coll: {"10": {"best": min(t, key=t.get), "nbytes": 1024,
+                             "times": dict(t)}}
+               for coll, t in times.items()}
+    return tuner.TunedTable(fingerprint="test:n8:rpp4", source="model",
+                            entries=entries)
+
+
+def test_guideline_composition_violation_fires():
+    bad = _synthetic_table({
+        "allreduce": {"ring_rs_ag": 10.0},
+        "reduce_scatter": {"ring": 1.0},
+        "allgather": {"ring": 1.0},
+    })
+    out = tuner.verify_guidelines(bad)
+    assert any("allreduce>rs+ag" in v for v in out), out
+
+
+def test_guideline_monotonicity_violation_fires():
+    t = _synthetic_table({"allgather": {"ring": 5.0}})
+    t.entries["allgather"]["14"] = {"best": "ring", "nbytes": 16384,
+                                    "times": {"ring": 1.0}}
+    out = tuner.verify_guidelines(t)
+    assert any("non-monotone" in v for v in out), out
+
+
+def test_guideline_specialized_violation_fires():
+    bad = _synthetic_table({
+        "alltoall": {"pairwise": 1.0, "hierarchical": 5.0},
+    })
+    out = tuner.verify_guidelines(bad, TOPO)
+    assert any("hierarchical slower" in v for v in out), out
+
+
+def test_guidelines_pass_on_consistent_table():
+    good = _synthetic_table({
+        "allreduce": {"ring_rs_ag": 1.5},
+        "reduce_scatter": {"ring": 1.0},
+        "allgather": {"ring": 1.0},
+        "alltoall": {"pairwise": 1.0, "hierarchical": 0.8},
+    })
+    assert tuner.verify_guidelines(good, TOPO) == []
