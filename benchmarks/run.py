@@ -1,31 +1,106 @@
 """Run every benchmark (one per paper pillar/table); CSV on stdout.
 
     PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --smoke   # schedule-build CI
+
+``--smoke`` skips the device benchmarks and instead builds **every**
+registered schedule (all dense families + partitioned chunkings) and
+both neighborhood plan modes on a spread of topologies (flat, 2-pod,
+3-level torus, non-power-of-two), runs each through the SimTransport
+accounting path, and emits one CSV row per schedule — so any
+schedule-construction or accounting regression fails CI even on a
+runner with zero devices.
 """
 from __future__ import annotations
 
 import sys
 import time
 
-from benchmarks.common import header
-# bench_tuner first: it forces the 8-host-device XLA flag, which must be
-# set before any sibling import initializes jax
-from benchmarks import bench_tuner
-from benchmarks import (bench_allgather, bench_alltoall, bench_neighbor,
-                        bench_partitioned, bench_paths,
-                        bench_moe_dispatch)
 
-BENCHES = [bench_allgather, bench_alltoall, bench_neighbor,
-           bench_partitioned, bench_paths, bench_moe_dispatch,
-           bench_tuner]
+def smoke() -> None:
+    import numpy as np
+
+    from benchmarks.common import emit, header
+    from repro.core.algorithms import REGISTRY
+    from repro.core.plan import CommGraph, build_plan, run_sim
+    from repro.core.schedule import NotApplicable
+    from repro.core.topology import Topology, flat_topology, torus_topology
+    from repro.core.transport import SimTransport
+
+    header()
+    topos = {
+        "flat8": flat_topology(8),
+        "pods8x4": Topology(8, 4),
+        "torus2x2x4": torus_topology(2, 2, 4),
+        "odd12x3": Topology(12, 3),
+    }
+    t0 = time.time()
+    built = 0
+    for tname, topo in topos.items():
+        n = topo.nranks
+        rng = np.random.default_rng(0)
+        for coll, algos in REGISTRY.items():
+            for name, builder in algos.items():
+                try:
+                    sched = builder(topo)
+                except NotApplicable:      # e.g. pow2-only variants
+                    emit("smoke", f"{tname}.{coll}.{name}", "skip")
+                    continue
+                buf = rng.normal(size=(n, sched.num_slots, 2)) \
+                    .astype(np.float32)
+                SimTransport(n).run(sched, buf)
+                msgs = sched.message_count(topo)
+                nbytes = sched.byte_count(4, topo)
+                t_model = sched.modeled_time(topo, 4096)
+                assert msgs >= 0 and nbytes >= 0 and t_model >= 0.0
+                emit("smoke", f"{tname}.{coll}.{name}.msgs", msgs)
+                emit("smoke", f"{tname}.{coll}.{name}.us",
+                     round(t_model * 1e6, 2), "us")
+                built += 1
+        graph = CommGraph.random(n, n_local=6, degree=min(n - 1, 4),
+                                 rng=rng, dup_frac=0.7)
+        values = [rng.normal(size=(6, 2)).astype(np.float32)
+                  for _ in range(n)]
+        for aggregate in (False, True):
+            plan = build_plan(graph, topo, aggregate=aggregate)
+            got = run_sim(plan, values)
+            for r in range(n):
+                segs = [values[s][idx]
+                        for s, idx in graph.recv_layout(r)]
+                want = (np.concatenate(segs) if segs
+                        else np.zeros((0, 2), np.float32))
+                np.testing.assert_allclose(got[r], want, atol=1e-6)
+            tr = plan.traffic(4)
+            emit("smoke", f"{tname}.{plan.name}.dcn_msgs",
+                 tr["msgs_dcn"])
+            emit("smoke", f"{tname}.{plan.name}.dcn_bytes", tr["dcn"])
+            built += 1
+    print(f"# smoke: {built} schedules built + simulated in "
+          f"{time.time() - t0:.1f}s", file=sys.stderr)
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if "--smoke" in argv:
+        smoke()
+        return
+
+    from benchmarks.common import header
+    # bench_tuner first: it forces the 8-host-device XLA flag, which must
+    # be set before any sibling import initializes jax
+    from benchmarks import bench_tuner
+    from benchmarks import (bench_allgather, bench_alltoall, bench_neighbor,
+                            bench_partitioned, bench_paths,
+                            bench_moe_dispatch)
+
+    benches = [bench_allgather, bench_alltoall, bench_neighbor,
+               bench_partitioned, bench_paths, bench_moe_dispatch,
+               bench_tuner]
     header()
     t0 = time.time()
-    for mod in BENCHES:
+    for mod in benches:
         mod.main()
-    print(f"# {len(BENCHES)} benchmarks OK in {time.time()-t0:.1f}s",
+    print(f"# {len(benches)} benchmarks OK in {time.time()-t0:.1f}s",
           file=sys.stderr)
 
 

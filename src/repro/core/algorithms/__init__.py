@@ -4,11 +4,18 @@ Every builder takes a ``Topology`` and returns a ``Schedule`` executable by
 any ``Transport``.  Registries map (collective, algorithm-name) to builder,
 mirroring MPI Advance's publicly-selectable algorithm tables.
 """
-from repro.core.algorithms import allgather, allreduce, alltoall, reduce_scatter
+from repro.core.algorithms import (allgather, allreduce, alltoall,
+                                   partitioned, reduce_scatter)
 
 REGISTRY = {
     "allgather": allgather.ALGORITHMS,
     "allreduce": allreduce.ALGORITHMS,
     "reduce_scatter": reduce_scatter.ALGORITHMS,
     "alltoall": alltoall.ALGORITHMS,
+    # chunked point-to-point transfers (MPIPCL partition-count choice);
+    # timed by the tuner like any CommSchedule, not exposed via mpix_*.
+    "partitioned": partitioned.ALGORITHMS,
 }
+
+# Collectives with an mpix_* API entry point (the dense families).
+DENSE_COLLECTIVES = ("allgather", "allreduce", "reduce_scatter", "alltoall")

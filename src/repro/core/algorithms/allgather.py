@@ -13,7 +13,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.schedule import Round, Schedule, make_round
+from repro.core.schedule import (CommRound, CommSchedule, NotApplicable,
+                                 make_round)
 from repro.core.topology import Topology
 
 
@@ -23,7 +24,7 @@ from repro.core.topology import Topology
 
 
 def _ring_rounds(nranks: int, members: list[int],
-                 owned: list[list[int]]) -> list[Round]:
+                 owned: list[list[int]]) -> list[CommRound]:
     """Ring allgather among ``members``; members[i] starts owning blocks
     ``owned[i]`` (equal sizes); after M-1 rounds each member owns the union.
     """
@@ -41,7 +42,7 @@ def _ring_rounds(nranks: int, members: list[int],
 
 
 def _bruck_rounds(nranks: int, members: list[int],
-                  owned: list[list[int]]) -> list[Round]:
+                  owned: list[list[int]]) -> list[CommRound]:
     """Dissemination (Bruck) allgather among ``members``: ceil(log2 M)
     rounds; round t, member i sends every set it has to member i - 2^t."""
     m = len(members)
@@ -63,9 +64,10 @@ def _bruck_rounds(nranks: int, members: list[int],
 
 
 def _recursive_doubling_rounds(nranks: int, members: list[int],
-                               owned: list[list[int]]) -> list[Round]:
+                               owned: list[list[int]]) -> list[CommRound]:
     m = len(members)
-    assert m & (m - 1) == 0, "recursive doubling needs power-of-2 members"
+    if m & (m - 1):
+        raise NotApplicable("recursive doubling needs power-of-2 members")
     rounds = []
     t = 0
     while (1 << t) < m:
@@ -93,13 +95,13 @@ _SUB = {"ring": _ring_rounds, "bruck": _bruck_rounds,
 # ---------------------------------------------------------------------------
 
 
-def _disjoint(a: Round, b: Round) -> bool:
+def _disjoint(a: CommRound, b: CommRound) -> bool:
     sa = {s for s, _ in a.perm} | {d for _, d in a.perm}
     sb = {s for s, _ in b.perm} | {d for _, d in b.perm}
     return not (sa & sb)
 
 
-def _fuse(a: Round, b: Round, nranks: int) -> Round:
+def _fuse(a: CommRound, b: CommRound, nranks: int) -> CommRound:
     assert a.reduce == b.reduce
     k = max(a.k, b.k)
 
@@ -110,19 +112,19 @@ def _fuse(a: Round, b: Round, nranks: int) -> Round:
         out[:, : x.shape[1]] = x
         return out
 
-    sa, ra = pad(a.send_blocks), pad(a.recv_blocks)
-    sb, rb = pad(b.send_blocks), pad(b.recv_blocks)
+    sa, ra = pad(a.gather_idx), pad(a.scatter_idx)
+    sb, rb = pad(b.gather_idx), pad(b.scatter_idx)
     mask_b = np.zeros(nranks, bool)
     for s, d in b.perm:
         mask_b[s] = True
         mask_b[d] = True
-    send = np.where(mask_b[:, None], sb, sa)
-    recv = np.where(mask_b[:, None], rb, ra)
-    return Round(perm=a.perm + b.perm, send_blocks=send, recv_blocks=recv,
-                 reduce=a.reduce)
+    gather = np.where(mask_b[:, None], sb, sa)
+    scatter = np.where(mask_b[:, None], rb, ra)
+    return CommRound(perm=a.perm + b.perm, gather_idx=gather,
+                     scatter_idx=scatter, reduce=a.reduce)
 
 
-def parallel_fuse(groups: list[list[Round]], nranks: int) -> list[Round]:
+def parallel_fuse(groups: list[list[CommRound]], nranks: int) -> list[CommRound]:
     """Zip same-index rounds of rank-disjoint groups into single rounds."""
     groups = [g for g in groups if g]
     if not groups:
@@ -144,27 +146,27 @@ def parallel_fuse(groups: list[list[Round]], nranks: int) -> list[Round]:
 # ---------------------------------------------------------------------------
 
 
-def _flat(topo: Topology, kind: str) -> Schedule:
+def _flat(topo: Topology, kind: str) -> CommSchedule:
     n = topo.nranks
     rounds = _SUB[kind](n, list(range(n)), [[r] for r in range(n)])
-    return Schedule(nranks=n, num_blocks=n, rounds=tuple(rounds),
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
                     name=f"allgather.{kind}")
 
 
-def ring(topo: Topology) -> Schedule:
+def ring(topo: Topology) -> CommSchedule:
     return _flat(topo, "ring")
 
 
-def bruck(topo: Topology) -> Schedule:
+def bruck(topo: Topology) -> CommSchedule:
     return _flat(topo, "bruck")
 
 
-def recursive_doubling(topo: Topology) -> Schedule:
+def recursive_doubling(topo: Topology) -> CommSchedule:
     return _flat(topo, "recursive_doubling")
 
 
 def hierarchical(topo: Topology, intra: str = "bruck",
-                 inter: str = "bruck") -> Schedule:
+                 inter: str = "bruck") -> CommSchedule:
     """Locality-aware 3-stage allgather.
 
     A) intra-pod allgather of the pod's own blocks         (ICI only)
@@ -180,7 +182,7 @@ def hierarchical(topo: Topology, intra: str = "bruck",
     n, R, Q = topo.nranks, topo.ranks_per_pod, topo.npods
     if Q == 1:
         return _flat(topo, intra)
-    rounds: list[Round] = []
+    rounds: list[CommRound] = []
     # A: per-pod allgather of local blocks (pods in parallel)
     groups_a = []
     for p in range(Q):
@@ -202,11 +204,11 @@ def hierarchical(topo: Topology, intra: str = "bruck",
                  for r in members]
         groups_c.append(_SUB[intra](n, members, owned))
     rounds += parallel_fuse(groups_c, n)
-    return Schedule(nranks=n, num_blocks=n, rounds=tuple(rounds),
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
                     name=f"allgather.hierarchical[{intra}+{inter}]")
 
 
-def hierarchical_ring(topo: Topology) -> Schedule:
+def hierarchical_ring(topo: Topology) -> CommSchedule:
     """Locality-aware variant with ring sub-stages (fewest messages per
     round; better when per-round payload is bandwidth-bound)."""
     return hierarchical(topo, intra="ring", inter="ring")

@@ -11,35 +11,35 @@ pod (ICI), the paper's node-aware allreduce story.
 """
 from __future__ import annotations
 
-from repro.core.schedule import Round, Schedule
+from repro.core.schedule import CommRound, CommSchedule
 from repro.core.topology import Topology
 from repro.core.algorithms import allgather as ag
 from repro.core.algorithms import reduce_scatter as rs
 from repro.core.algorithms.allgather import parallel_fuse
 
 
-def ring_rs_ag(topo: Topology) -> Schedule:
+def ring_rs_ag(topo: Topology) -> CommSchedule:
     n = topo.nranks
     members = list(range(n))
     singles = [[r] for r in range(n)]
     rounds = (rs._ring_rs_rounds(n, members, singles)
               + ag._ring_rounds(n, members, singles))
-    return Schedule(nranks=n, num_blocks=n, rounds=tuple(rounds),
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
                     name="allreduce.ring_rs_ag")
 
 
-def recursive_halving_doubling(topo: Topology) -> Schedule:
+def recursive_halving_doubling(topo: Topology) -> CommSchedule:
     n = topo.nranks
     members = list(range(n))
     singles = [[r] for r in range(n)]
     rounds = (rs._halving_rounds(n, members, singles)
               + ag._recursive_doubling_rounds(n, members, singles))
-    return Schedule(nranks=n, num_blocks=n, rounds=tuple(rounds),
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
                     name="allreduce.recursive_halving_doubling")
 
 
 def hierarchical(topo: Topology, intra: str = "ring",
-                 inter: str = "ring") -> Schedule:
+                 inter: str = "ring") -> CommSchedule:
     """4-stage node-aware allreduce:
     A) intra-pod reduce-scatter of stripes   (ICI)
     B) inter-pod reduce-scatter (1 block)    (DCN, minimal + balanced)
@@ -51,7 +51,7 @@ def hierarchical(topo: Topology, intra: str = "ring",
         return ring_rs_ag(topo)
     rs_sub = {"ring": rs._ring_rs_rounds,
               "recursive_halving": rs._halving_rounds}[intra]
-    rounds: list[Round] = []
+    rounds: list[CommRound] = []
     # A
     groups = []
     for p in range(Q):
@@ -82,11 +82,11 @@ def hierarchical(topo: Topology, intra: str = "ring",
                  for r in members]
         groups.append(ag._ring_rounds(n, members, owned))
     rounds += parallel_fuse(groups, n)
-    return Schedule(nranks=n, num_blocks=n, rounds=tuple(rounds),
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
                     name=f"allreduce.hierarchical[{intra}+{inter}]")
 
 
-def hierarchical_rh(topo: Topology) -> Schedule:
+def hierarchical_rh(topo: Topology) -> CommSchedule:
     """Locality-aware variant with recursive-halving intra-pod stages
     (log rounds on ICI; needs power-of-two ranks per pod)."""
     return hierarchical(topo, intra="recursive_halving")

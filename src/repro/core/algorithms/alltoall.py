@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.schedule import Round, Schedule, make_round
+from repro.core.schedule import CommRound, CommSchedule, make_round
 from repro.core.topology import Topology
 
 # content id for "data s -> d" with N ranks: s * N + d
@@ -29,7 +29,7 @@ def _content(s: int, d: int, n: int) -> int:
     return s * n + d
 
 
-def pairwise(topo: Topology) -> Schedule:
+def pairwise(topo: Topology) -> CommSchedule:
     """N-1 rounds; round t: rank r sends r -> (r+t) data, receives from
     (r-t).  One block per message; self block never moves.
 
@@ -54,11 +54,11 @@ def pairwise(topo: Topology) -> Schedule:
             post[r, s] = r if s == r else n + s
         for j in range(n, 2 * n):
             post[r, j] = j
-    return Schedule(nranks=n, num_blocks=2 * n, rounds=tuple(rounds),
-                    name="alltoall.pairwise", local_post=post, out_blocks=n)
+    return CommSchedule(nranks=n, num_slots=2 * n, rounds=tuple(rounds),
+                    name="alltoall.pairwise", local_post=post, out_slots=n)
 
 
-def bruck(topo: Topology) -> Schedule:
+def bruck(topo: Topology) -> CommSchedule:
     """log2(N) rounds of N/2 blocks.  Slot v travels a total distance of
     exactly v (one hop per set bit), so after local_pre places data r->d
     at slot (d-r) mod N, every value lands on its destination; local_post
@@ -83,11 +83,11 @@ def bruck(topo: Topology) -> Schedule:
             recv[(r + off) % n] = slots
         rounds.append(make_round(n, edges, send, recv))
         t += 1
-    return Schedule(nranks=n, num_blocks=n, rounds=tuple(rounds),
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
                     name="alltoall.bruck", local_pre=pre, local_post=post)
 
 
-def hierarchical(topo: Topology) -> Schedule:
+def hierarchical(topo: Topology) -> CommSchedule:
     """Two-stage locality-aware alltoall (ownership-simulated tables).
 
     Stage 1 (intra-pod, pairwise): (p,l) hands (p,l') every block destined
@@ -101,7 +101,7 @@ def hierarchical(topo: Topology) -> Schedule:
         return pairwise(topo)
     # where[r] maps content-id -> slot; start: slot d holds r->d.
     where = [{_content(r, d, n): d for d in range(n)} for r in range(n)]
-    rounds: list[Round] = []
+    rounds: list[CommRound] = []
 
     def do_round(edges_payload, reduce=False):
         """edges_payload: list of (src, dst, [content ids]).  Receiver
@@ -154,7 +154,7 @@ def hierarchical(topo: Topology) -> Schedule:
     for r in range(n):
         for s in range(n):
             post[r, s] = where[r][_content(s, r, n)]
-    return Schedule(nranks=n, num_blocks=n, rounds=tuple(rounds),
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
                     name="alltoall.hierarchical", local_post=post)
 
 

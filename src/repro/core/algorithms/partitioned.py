@@ -35,9 +35,13 @@ from __future__ import annotations
 import functools
 from typing import Callable, Sequence
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
+from repro.core.schedule import CommSchedule, make_round
+from repro.core.topology import Topology
 from repro.core.transport import _flat_rank
 
 from repro import compat
@@ -52,6 +56,47 @@ def _shift_perm(n: int, shift: int = 1) -> list[tuple[int, int]]:
 
 
 # ---------------------------------------------------------------------------
+# partitioned transfers on the unified IR
+# ---------------------------------------------------------------------------
+
+
+def partitioned_schedule(nranks: int, perm: Sequence[tuple[int, int]],
+                         partitions: int = 1) -> CommSchedule:
+    """A partitioned point-to-point transfer as a ``CommSchedule``.
+
+    The working buffer has ``2 * partitions`` slots per rank: rows
+    ``[0, P)`` hold the outgoing chunks, rows ``[P, 2P)`` receive.
+    Round ``i`` ships chunk ``i`` along ``perm`` — MPIPCL's P
+    independently-committed partitions, expressed in the same IR the
+    dense and neighborhood collectives compile to (so the tuner can
+    time the partition-count tradeoff like any other schedule).
+    """
+    P = int(partitions)
+    assert P >= 1
+    edges = tuple((int(s), int(d)) for s, d in perm)
+    rounds = []
+    for i in range(P):
+        send = {s: [i] for s, _ in edges}
+        recv = {d: [P + i] for _, d in edges}
+        rounds.append(make_round(nranks, edges, send, recv))
+    return CommSchedule(
+        nranks=nranks, num_slots=2 * P, rounds=tuple(rounds),
+        name=f"partitioned.shift[p{P}]", out_slots=P,
+        out_offsets=np.full(nranks, P, np.int64))
+
+
+def _chunked_shift(topo: Topology, partitions: int) -> CommSchedule:
+    return partitioned_schedule(topo.nranks, _shift_perm(topo.nranks),
+                                partitions)
+
+
+ALGORITHMS = {
+    f"p{p}": functools.partial(_chunked_shift, partitions=p)
+    for p in (1, 2, 4, 8)
+}
+
+
+# ---------------------------------------------------------------------------
 # raw partitioned point-to-point
 # ---------------------------------------------------------------------------
 
@@ -60,12 +105,15 @@ def partitioned_ppermute(x: jax.Array, axis_name, perm,
                          partitions: int,
                          consume: Callable[[jax.Array, jax.Array], jax.Array]
                          | None = None,
-                         init=None):
+                         init=None, via: str = "scan"):
     """Send ``x`` along ``perm`` in ``partitions`` chunks (leading dim).
 
     Without ``consume``: returns the fully received buffer — semantically
     identical to one monolithic ppermute (the 1-partition case *is* the
     monolithic transfer, the paper's "no worse than base pt2pt" claim).
+    ``via="schedule"`` lowers this path through the unified
+    ``CommSchedule`` IR + ``ShardMapTransport`` instead of a scan
+    (identical result; lets the tuner time it like any collective).
 
     With ``consume(carry, chunk) -> carry``: receive-side early-bird —
     each arriving partition is folded into ``carry`` immediately; chunk
@@ -77,6 +125,16 @@ def partitioned_ppermute(x: jax.Array, axis_name, perm,
     chunks = x.reshape((partitions, chunk) + x.shape[1:])
 
     if consume is None:
+        if via == "schedule":
+            from repro.core.transport import ShardMapTransport
+            names = _axes_tuple(axis_name)
+            n = 1
+            for a in names:
+                n *= compat.axis_size(a)
+            sched = partitioned_schedule(n, perm, partitions)
+            buf = jnp.concatenate([chunks, jnp.zeros_like(chunks)], axis=0)
+            out = ShardMapTransport(n, names).run(sched, buf)
+            return out[partitions:].reshape(x.shape)
         def body(_, c):
             return None, jax.lax.ppermute(c, axis_name, perm)
         _, out = jax.lax.scan(body, None, chunks)

@@ -6,13 +6,14 @@ reduced block ``r`` (other slots hold stale partials).
 """
 from __future__ import annotations
 
-from repro.core.schedule import Round, Schedule, make_round
+from repro.core.schedule import (CommRound, CommSchedule, NotApplicable,
+                                 make_round)
 from repro.core.topology import Topology
 from repro.core.algorithms.allgather import parallel_fuse
 
 
 def _ring_rs_rounds(nranks: int, members: list[int],
-                    owned: list[list[int]]) -> list[Round]:
+                    owned: list[list[int]]) -> list[CommRound]:
     """Ring reduce-scatter among ``members``: member i ends owning the
     fully reduced block set ``owned[i]``.  M-1 rounds; round t member i
     sends the traveling partial of set owned[(i - t - 1) % M] to i+1."""
@@ -31,13 +32,14 @@ def _ring_rs_rounds(nranks: int, members: list[int],
 
 
 def _halving_rounds(nranks: int, members: list[int],
-                    owned: list[list[int]]) -> list[Round]:
+                    owned: list[list[int]]) -> list[CommRound]:
     """Recursive halving among 2^k members; member i ends owning owned[i].
 
     Round over offsets M/2, M/4, ..., 1: partner i^off; each member sends
     the half of its active sets belonging to the partner's side."""
     m = len(members)
-    assert m & (m - 1) == 0, "recursive halving needs power-of-2 members"
+    if m & (m - 1):
+        raise NotApplicable("recursive halving needs power-of-2 members")
     active = {i: set(range(m)) for i in range(m)}  # set indices, not blocks
     rounds = []
     off = m // 2
@@ -58,22 +60,22 @@ def _halving_rounds(nranks: int, members: list[int],
     return rounds
 
 
-def ring(topo: Topology) -> Schedule:
+def ring(topo: Topology) -> CommSchedule:
     n = topo.nranks
     rounds = _ring_rs_rounds(n, list(range(n)), [[r] for r in range(n)])
-    return Schedule(nranks=n, num_blocks=n, rounds=tuple(rounds),
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
                     name="reduce_scatter.ring")
 
 
-def recursive_halving(topo: Topology) -> Schedule:
+def recursive_halving(topo: Topology) -> CommSchedule:
     n = topo.nranks
     rounds = _halving_rounds(n, list(range(n)), [[r] for r in range(n)])
-    return Schedule(nranks=n, num_blocks=n, rounds=tuple(rounds),
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
                     name="reduce_scatter.recursive_halving")
 
 
 def hierarchical(topo: Topology, intra: str = "ring",
-                 inter: str = "ring") -> Schedule:
+                 inter: str = "ring") -> CommSchedule:
     """Locality-aware 2-stage reduce-scatter.
 
     A) intra-pod RS: local rank l reduces stripe S_l = {(q, l) for all q}
@@ -86,7 +88,7 @@ def hierarchical(topo: Topology, intra: str = "ring",
     if Q == 1:
         return ring(topo) if intra == "ring" else recursive_halving(topo)
     sub = {"ring": _ring_rs_rounds, "recursive_halving": _halving_rounds}
-    rounds: list[Round] = []
+    rounds: list[CommRound] = []
     groups_a = []
     for p in range(Q):
         members = list(topo.pod_ranks(p))
@@ -100,7 +102,7 @@ def hierarchical(topo: Topology, intra: str = "ring",
         owned = [[topo.rank(q, l)] for q in range(Q)]
         groups_b.append(sub[inter](n, members, owned))
     rounds += parallel_fuse(groups_b, n)
-    return Schedule(nranks=n, num_blocks=n, rounds=tuple(rounds),
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
                     name=f"reduce_scatter.hierarchical[{intra}+{inter}]")
 
 

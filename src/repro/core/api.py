@@ -22,7 +22,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.topology import Topology
+from repro.core.topology import (DCN_LINK, ICI_LINK, TopoLevel, Topology)
 from repro.core.transport import ShardMapTransport, _flat_rank
 from repro.core import selector
 from repro.core.algorithms import REGISTRY
@@ -39,6 +39,10 @@ def topology_from_axes(axis_names: Sequence[str]) -> Topology:
 
     Convention: if the first axis is named ``"pod"`` it is the DCN axis and
     everything after it is intra-pod; otherwise the whole space is one pod.
+    A single intra-pod axis canonicalizes to the historical 1/2-level
+    form (stable fingerprints for every existing call site); two or more
+    intra-pod axes are kept as distinct ICI levels, giving the tuner
+    per-axis-geometry (torus-aware) fingerprints.
     Must be called inside shard_map (uses static axis sizes).
     """
     names = _axes_tuple(axis_names)
@@ -46,15 +50,22 @@ def topology_from_axes(axis_names: Sequence[str]) -> Topology:
     nranks = 1
     for s in sizes:
         nranks *= s
-    if names[0] == "pod" and len(names) > 1:
-        return Topology(nranks=nranks, ranks_per_pod=nranks // sizes[0])
-    return Topology(nranks=nranks, ranks_per_pod=nranks)
+    has_pod = names[0] == "pod" and len(names) > 1
+    intra = list(zip(names, sizes))[1:] if has_pod else list(
+        zip(names, sizes))
+    if len(intra) <= 1:
+        return Topology(nranks=nranks,
+                        ranks_per_pod=nranks // sizes[0] if has_pod
+                        else nranks)
+    levels = []
+    if has_pod:
+        levels.append(TopoLevel("dcn", sizes[0], DCN_LINK, dcn=True))
+    levels += [TopoLevel(nm, sz, ICI_LINK) for nm, sz in intra]
+    return Topology.from_levels(levels)
 
 
 @functools.lru_cache(maxsize=None)
-def _schedule(collective: str, algorithm: str, nranks: int,
-              ranks_per_pod: int):
-    topo = Topology(nranks=nranks, ranks_per_pod=ranks_per_pod)
+def _schedule(collective: str, algorithm: str, topo: Topology):
     return REGISTRY[collective][algorithm](topo)
 
 
@@ -84,8 +95,7 @@ def _resolve(collective: str, algorithm: str, topo: Topology, nbytes: int,
                                     policy=policy or _DEFAULT_POLICY)
     if algorithm == "xla":
         return "xla", None
-    return algorithm, _schedule(collective, algorithm, topo.nranks,
-                                topo.ranks_per_pod)
+    return algorithm, _schedule(collective, algorithm, topo)
 
 
 def _pad_to(x: jax.Array, mult: int):
@@ -144,7 +154,11 @@ def mpix_reduce_scatter(x: jax.Array, axis_names, *,
         return jax.lax.psum_scatter(x, names, scatter_dimension=0,
                                     tiled=True)
     n = topo.nranks
-    assert x.shape[0] % n == 0, (x.shape, n)
+    if x.shape[0] % n:
+        raise ValueError(
+            f"mpix_reduce_scatter: leading dim {x.shape[0]} of input "
+            f"shape {tuple(x.shape)} must be divisible by nranks={n} "
+            f"(one scatter block per rank)")
     blocks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
     out = ShardMapTransport(n, names).run(sched, blocks)
     return out[_flat_rank(names)]
@@ -160,7 +174,11 @@ def mpix_alltoall(x: jax.Array, axis_names, *, algorithm: str = "auto",
     algorithm, sched = _resolve("alltoall", algorithm, topo,
                                 x.size * x.dtype.itemsize, policy)
     n = topo.nranks
-    assert x.shape[0] % n == 0, (x.shape, n)
+    if x.shape[0] % n:
+        raise ValueError(
+            f"mpix_alltoall: leading dim {x.shape[0]} of input shape "
+            f"{tuple(x.shape)} must be divisible by nranks={n} "
+            f"(one block per destination rank)")
     if algorithm == "xla":
         # tiled alltoall: leading dim split into n segments; segment s of
         # the output came from rank s.
@@ -174,8 +192,40 @@ def mpix_alltoall(x: jax.Array, axis_names, *, algorithm: str = "auto",
     return out[: sched.result_blocks].reshape(x.shape)
 
 
+# ---------------------------------------------------------------------------
+# neighborhood collectives (paper §2.2, Listing 3/4)
+# ---------------------------------------------------------------------------
+
+
+def make_neighbor_plan(graph, topo: Topology, *,
+                       aggregate: bool | None = None,
+                       policy: str | None = None,
+                       elem_bytes: int | None = None):
+    """Compile a persistent neighborhood-alltoallv plan (init-time, not
+    traced).  ``aggregate=None`` resolves standard-vs-locality-aware via
+    the selection policy ladder (process default when ``policy=None``;
+    "tuned" reads the winner persisted by ``tuner.autotune``).
+    ``elem_bytes`` is the byte width of one value row (feat * itemsize)
+    — it anchors the model comparison and the tuned-table lookup, so
+    pass it whenever rows are wider than one float32."""
+    from repro.core.plan import ELEM_BYTES, build_plan
+    return build_plan(graph, topo, aggregate=aggregate,
+                      policy=policy or _DEFAULT_POLICY,
+                      elem_bytes=ELEM_BYTES if elem_bytes is None
+                      else elem_bytes)
+
+
+def mpix_neighbor_alltoallv(x: jax.Array, axis_names, plan) -> jax.Array:
+    """Execute a compiled ``NeighborPlan`` (call inside shard_map).
+
+    ``x`` is this rank's [n_local_max, feat] value rows; returns
+    [n_recv_max, feat] (rows past this rank's recv size are zeros)."""
+    from repro.core.plan import run_shardmap
+    return run_shardmap(plan, x, _axes_tuple(axis_names))
+
+
 __all__ = [
     "mpix_allgather", "mpix_allreduce", "mpix_reduce_scatter",
-    "mpix_alltoall", "topology_from_axes", "set_default_policy",
-    "get_default_policy",
+    "mpix_alltoall", "mpix_neighbor_alltoallv", "make_neighbor_plan",
+    "topology_from_axes", "set_default_policy", "get_default_policy",
 ]

@@ -8,9 +8,11 @@ ship each value across a node boundary once, no matter how many ranks on
 the far side need it, and aggregate many small inter-node messages into
 one per node pair.
 
-TPU adaptation: the plan is compiled in Python to static gather /
-ppermute / scatter rounds (``NeighborRound``) over a single working
-buffer per rank.  Two build modes:
+TPU adaptation: the plan is compiled in Python to the same unified
+gather-permute-scatter IR the dense collectives use (``CommRound`` /
+``CommSchedule``, see schedule.py) and executed by the shared
+``SimTransport`` / ``ShardMapTransport`` backends — there are no
+neighbor-specific executors.  Two build modes:
 
   * ``aggregate=False`` — standard: one message per graph edge, rounds
     formed by greedy edge coloring (each round is a partial permutation,
@@ -24,6 +26,9 @@ buffer per rank.  Two build modes:
       C) intra-pod: the receiving aggregator fans values out to final
          destinations (duplication happens on fast ICI links only).
     Intra-pod graph edges bypass the aggregators (direct, colored).
+  * ``aggregate=None``  — select per policy (fixed / model / tuned, see
+    selector.select_neighbor): the tuned policy reads the persisted
+    standard-vs-locality-aware winner measured by ``tuner.autotune``.
 
 Both modes land received values in an identical recv layout (segments
 ordered by source rank), so they are drop-in interchangeable — the
@@ -33,7 +38,8 @@ Working buffer layout per rank (rows of width ``feat``):
     [0, n_local)                local send values (input)
     [n_local, recv_off)         staging region (aggregators only)
     [recv_off, recv_off+n_recv) final recv segments (output)
-plus one trailing scratch row absorbing masked sends/receives.
+The transports append one trailing scratch row internally to absorb
+masked sends/receives.
 """
 from __future__ import annotations
 
@@ -45,7 +51,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.schedule import CommRound, CommSchedule
 from repro.core.topology import Topology
+from repro.core.transport import ShardMapTransport, SimTransport
+
+# Back-compat alias: neighbor rounds *are* IR rounds since unification.
+NeighborRound = CommRound
+
+ELEM_BYTES = 4   # accounting default: float32 rows
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +91,10 @@ class CommGraph:
     def n_recv(self, rank: int) -> int:
         return sum(len(ix) for _, ix in self.recv_layout(rank))
 
+    def total_values(self) -> int:
+        """Total value rows the exchange moves (standard-plan volume)."""
+        return sum(len(idx) for idx in self.edges.values())
+
     @staticmethod
     def random(nranks: int, n_local: int, degree: int, rng,
                dup_frac: float = 0.5) -> "CommGraph":
@@ -101,68 +118,46 @@ class CommGraph:
 
 
 # ---------------------------------------------------------------------------
-# rounds
+# the compiled plan (a CommSchedule plus graph metadata)
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
-class NeighborRound:
-    """One ppermute round over the working buffer.
-
-    perm:        (src, dst) partial matching.
-    gather_idx:  [nranks, W] rows of working-buffer rows to pack (-1 pads).
-    scatter_idx: [nranks, W] landing rows for received slots (-1 drops).
-    payload:     [nranks] true (unpadded) element counts, for accounting.
-    """
-
-    perm: tuple[tuple[int, int], ...]
-    gather_idx: np.ndarray
-    scatter_idx: np.ndarray
-    payload: np.ndarray
-
-    def __post_init__(self):
-        srcs = [s for s, _ in self.perm]
-        dsts = [d for _, d in self.perm]
-        assert len(set(srcs)) == len(srcs)
-        assert len(set(dsts)) == len(dsts)
-        dset = set(dsts)
-        for r in range(self.scatter_idx.shape[0]):
-            if r not in dset:
-                assert (self.scatter_idx[r] < 0).all()
-
-    @property
-    def width(self) -> int:
-        return self.gather_idx.shape[1]
-
-
-@dataclasses.dataclass(frozen=True)
 class NeighborPlan:
-    """A compiled persistent neighborhood alltoallv."""
+    """A compiled persistent neighborhood alltoallv.
+
+    Since the IR unification this is a thin wrapper: ``schedule`` is an
+    ordinary ``CommSchedule`` (executable by any Transport, timeable by
+    the tuner) and the plan only adds the graph/recv-layout metadata the
+    API wrappers need.
+    """
 
     graph: CommGraph
     topo: Topology
-    rounds: tuple[NeighborRound, ...]
-    buf_rows: int                 # working rows (excl. scratch)
+    schedule: CommSchedule
     recv_offsets: tuple[int, ...]  # per rank, start of recv region
     recv_sizes: tuple[int, ...]
     name: str = "neighbor"
 
-    # -- accounting (paper claim: aggregation cuts DCN bytes/messages) ----
-    def traffic(self, elem_bytes: int = 1) -> dict:
-        out = {"ici": 0, "dcn": 0, "msgs_ici": 0, "msgs_dcn": 0}
-        for rnd in self.rounds:
-            for s, d in rnd.perm:
-                n = int(rnd.payload[s])
-                if n == 0 or s == d:   # self pairs are on-chip copies
-                    continue
-                key = "ici" if self.topo.is_local(s, d) else "dcn"
-                out[key] += n * elem_bytes
-                out["msgs_" + key] += 1
-        return out
+    @property
+    def rounds(self) -> tuple[CommRound, ...]:
+        return self.schedule.rounds
+
+    @property
+    def buf_rows(self) -> int:        # working rows (excl. scratch)
+        return self.schedule.num_slots
 
     @property
     def num_rounds(self) -> int:
-        return len(self.rounds)
+        return self.schedule.num_rounds
+
+    # -- accounting (paper claim: aggregation cuts DCN bytes/messages) ----
+    def traffic(self, elem_bytes: int = 1) -> dict:
+        return self.schedule.traffic(self.topo, elem_bytes)
+
+    def modeled_time(self, elem_bytes: int = ELEM_BYTES) -> float:
+        """alpha-beta time of the exchange with ``elem_bytes``-wide rows."""
+        return self.schedule.modeled_time(self.topo, elem_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -194,7 +189,7 @@ def _edge_color(edges: list[tuple[int, int]]) -> list[list[int]]:
 
 
 def _mk_round(nranks: int, items: list[tuple[int, int, np.ndarray, np.ndarray]]
-              ) -> NeighborRound:
+              ) -> CommRound:
     """items: (src, dst, gather_rows, scatter_rows) with equal lengths."""
     w = max(1, max(len(g) for _, _, g, _ in items))
     gi = np.full((nranks, w), -1, np.int64)
@@ -207,14 +202,30 @@ def _mk_round(nranks: int, items: list[tuple[int, int, np.ndarray, np.ndarray]]
         gi[s, : len(g)] = g
         si[d, : len(t)] = t
         pay[s] = len(g)
-    return NeighborRound(perm=tuple(perm), gather_idx=gi, scatter_idx=si,
-                         payload=pay)
+    return CommRound(perm=tuple(perm), gather_idx=gi, scatter_idx=si,
+                     payload=pay)
 
 
 def build_plan(graph: CommGraph, topo: Topology, *,
-               aggregate: bool = False) -> NeighborPlan:
+               aggregate: bool | None = False,
+               policy: str | None = None,
+               elem_bytes: int = ELEM_BYTES) -> NeighborPlan:
+    """Compile ``graph`` into a persistent plan on the unified IR.
+
+    ``aggregate=None`` resolves the standard-vs-locality-aware choice
+    through the selection policy ladder (``policy=None`` uses the
+    process default; ``"tuned"`` reads ``tuner.autotune``'s persisted
+    winner for this topology and exchange volume).
+    """
     n = graph.nranks
     assert topo.nranks == n
+    if aggregate is None:
+        from repro.core import selector
+        mode = selector.resolve_neighbor_mode(
+            graph, topo, policy=policy, elem_bytes=elem_bytes)
+        if mode is None:
+            return model_argmin_plan(graph, topo, elem_bytes=elem_bytes)
+        aggregate = mode == "locality_aware"
     # final recv layout (identical across modes)
     recv_off = [0] * n
     recv_size = [graph.n_recv(r) for r in range(n)]
@@ -242,8 +253,12 @@ def build_plan(graph: CommGraph, topo: Topology, *,
                 items.append((s, d, idx.astype(np.int64), tgt))
             rounds.append(_mk_round(n, items))
         buf_rows = buf0 + max(recv_size, default=0)
-        return NeighborPlan(graph=graph, topo=topo, rounds=tuple(rounds),
-                            buf_rows=buf_rows,
+        sched = CommSchedule(
+            nranks=n, num_slots=buf_rows, rounds=tuple(rounds),
+            name="neighbor.standard",
+            out_slots=max(recv_size, default=0),
+            out_offsets=np.asarray(recv_off, np.int64))
+        return NeighborPlan(graph=graph, topo=topo, schedule=sched,
                             recv_offsets=tuple(recv_off),
                             recv_sizes=tuple(recv_size),
                             name="neighbor.standard")
@@ -297,11 +312,8 @@ def build_plan(graph: CommGraph, topo: Topology, *,
             pos += len(idx)
 
     # Phase A: src s -> aggregator a(pod(s), q), payload U[(s, q)].
-    # Self-forward (s is its own aggregator) is a local copy: emit as a
-    # zero-message gather/scatter round? Simpler: keep it as a round edge
-    # only when s != a; when s == a the staging rows are filled by a local
-    # permutation we fold into phase B's gather (gather directly from the
-    # local value rows).
+    # When s is its own aggregator the staging rows are filled by folding
+    # the copy into phase B's gather (gather directly from the value rows).
     phase_a_edges = []   # (s, a, gather_rows, scatter_rows)
     for (s, q), uniq in sorted(U.items()):
         a = agg_out(topo.pod(s), q)
@@ -343,10 +355,7 @@ def build_plan(graph: CommGraph, topo: Topology, *,
                   zip(uniq, in_stage_pos[(b, s, q)])}
         g = np.array([lookup[int(v)] for v in idx], np.int64)
         t = seg_start[(s, d)] + np.arange(len(idx))
-        if b == d:   # arrives at its own final dest: fold into phase C's
-            phase_c_edges.append((b, d, g, t))  # self edge -> local round
-        else:
-            phase_c_edges.append((b, d, g, t))
+        phase_c_edges.append((b, d, g, t))
     # intra-pod direct edges (any phase; run them with phase A coloring)
     for (s, d), idx in sorted(graph.edges.items()):
         if topo.pod(s) != topo.pod(d):
@@ -354,7 +363,7 @@ def build_plan(graph: CommGraph, topo: Topology, *,
         t = seg_start[(s, d)] + np.arange(len(idx))
         phase_a_edges.append((s, d, idx.astype(np.int64), t))
 
-    rounds: list[NeighborRound] = []
+    rounds: list[CommRound] = []
     for phase in (phase_a_edges, phase_b_edges, phase_c_edges):
         # split self-edges (local copies) from real messages
         msgs = [(s, d, g, t) for (s, d, g, t) in phase if s != d]
@@ -376,65 +385,63 @@ def build_plan(graph: CommGraph, topo: Topology, *,
             rounds.append(_mk_round(n, items))
 
     buf_rows = buf0 + stage_cap + max(recv_size, default=0)
-    return NeighborPlan(graph=graph, topo=topo, rounds=tuple(rounds),
-                        buf_rows=buf_rows, recv_offsets=tuple(recv_off),
+    sched = CommSchedule(
+        nranks=n, num_slots=buf_rows, rounds=tuple(rounds),
+        name="neighbor.locality_aware",
+        out_slots=max(recv_size, default=0),
+        out_offsets=np.asarray(recv_off, np.int64))
+    return NeighborPlan(graph=graph, topo=topo, schedule=sched,
+                        recv_offsets=tuple(recv_off),
                         recv_sizes=tuple(recv_size),
                         name="neighbor.locality_aware")
 
 
+def model_argmin_plan(graph: CommGraph, topo: Topology, *,
+                      elem_bytes: int = ELEM_BYTES) -> NeighborPlan:
+    """Model-policy fallback: build both modes once, keep the one with
+    the lower alpha-beta time (the single implementation behind both
+    ``build_plan(aggregate=None)`` and ``selector.select_neighbor``)."""
+    plans = [build_plan(graph, topo, aggregate=agg,
+                        elem_bytes=elem_bytes)
+             for agg in (False, True)]   # standard first: wins ties
+    return min(plans,
+               key=lambda p: p.schedule.modeled_time(topo, elem_bytes))
+
+
 # ---------------------------------------------------------------------------
-# executors
+# execution — thin wrappers over the shared transports
 # ---------------------------------------------------------------------------
 
 
 def run_sim(plan: NeighborPlan, values: Sequence[np.ndarray]) -> list[np.ndarray]:
     """numpy oracle executor: ``values[r]`` = rank r's [n_local_r, feat]
-    send values; returns per-rank recv arrays [n_recv_r, feat]."""
+    send values; returns per-rank recv arrays [n_recv_r, feat].
+    Delegates to the shared ``SimTransport``."""
     n = plan.graph.nranks
     feat = values[0].shape[1:]
-    B = plan.buf_rows
-    buf = np.zeros((n, B + 1) + feat, values[0].dtype)
+    buf = np.zeros((n, plan.buf_rows) + feat, values[0].dtype)
     for r in range(n):
         buf[r, : values[r].shape[0]] = values[r]
-    for rnd in plan.rounds:
-        inbox = np.zeros((n, rnd.width) + feat, buf.dtype)
-        for s, d in rnd.perm:
-            g = rnd.gather_idx[s]
-            payload = np.where((g >= 0).reshape((-1,) + (1,) * len(feat)),
-                               buf[s, np.clip(g, 0, B)], 0)
-            inbox[d] = payload
-        for _, d in rnd.perm:
-            t = rnd.scatter_idx[d]
-            live = t >= 0
-            buf[d, t[live]] = inbox[d][live]
-    return [buf[r, plan.recv_offsets[r]: plan.recv_offsets[r]
-                 + plan.recv_sizes[r]] for r in range(n)]
+    out = SimTransport(n).run(plan.schedule, buf)
+    return [out[r, plan.recv_offsets[r]: plan.recv_offsets[r]
+                + plan.recv_sizes[r]] for r in range(n)]
 
 
 def run_shardmap(plan: NeighborPlan, local_values: jax.Array,
                  axis_names) -> jax.Array:
     """SPMD executor (call inside shard_map): ``local_values`` is this
     rank's [n_local_max, feat] value rows; returns [n_recv_max, feat]
-    (rows beyond this rank's recv_size are zeros)."""
+    (rows beyond this rank's recv_size are zeros).
+    Delegates to the shared ``ShardMapTransport``."""
     from repro.core.transport import _flat_rank
 
     names = ((axis_names,) if isinstance(axis_names, str)
              else tuple(axis_names))
-    rank = _flat_rank(names)
-    B = plan.buf_rows
+    n = plan.graph.nranks
     feat = local_values.shape[1:]
-    buf = jnp.zeros((B + 1,) + feat, local_values.dtype)
+    buf = jnp.zeros((plan.buf_rows,) + feat, local_values.dtype)
     buf = buf.at[: local_values.shape[0]].set(local_values)
-    axis_arg = names if len(names) > 1 else names[0]
-    for rnd in plan.rounds:
-        g = jnp.asarray(rnd.gather_idx)[rank]
-        s = jnp.asarray(rnd.scatter_idx)[rank]
-        kdims = (rnd.width,) + (1,) * len(feat)
-        payload = jnp.where((g >= 0).reshape(kdims),
-                            buf[jnp.clip(g, 0, B)], 0)
-        recvd = jax.lax.ppermute(payload, axis_arg, list(rnd.perm))
-        buf = buf.at[jnp.where(s >= 0, s, B)].set(recvd)
-        buf = buf.at[B].set(0)
+    out = ShardMapTransport(n, names).run(plan.schedule, buf)
     n_recv_max = max(plan.recv_sizes)
-    offs = jnp.asarray(plan.recv_offsets)[rank]
-    return jax.lax.dynamic_slice_in_dim(buf, offs, n_recv_max, axis=0)
+    offs = jnp.asarray(plan.recv_offsets)[_flat_rank(names)]
+    return jax.lax.dynamic_slice_in_dim(out, offs, n_recv_max, axis=0)

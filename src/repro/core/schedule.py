@@ -1,28 +1,44 @@
-"""Static communication schedules — the "persistent plan" core of the MPIX layer.
+"""The unified gather-permute-scatter IR — the "persistent plan" core.
 
 MPI Advance hoists all collective setup into a one-time initialization
-(persistent collectives, MPI-4).  In JAX the same split is natural and
-*mandatory*: ``jax.lax.ppermute`` requires a static permutation, so every
-collective algorithm here compiles — once, in Python, at plan time — to a
-``Schedule``: a list of ``Round``s, each a static set of (src, dst) pairs
-plus per-rank block index tables describing which blocks of the local
-buffer are sent and where received blocks land.
+(persistent collectives, MPI-4) and writes every optimization — dense
+collectives, neighborhood collectives, partitioned transfers — against
+one point-to-point substrate.  In JAX the same split is natural and
+*mandatory*: ``jax.lax.ppermute`` requires a static permutation, so
+every algorithm here compiles — once, in Python, at plan time — to a
+``CommSchedule``: a list of ``CommRound``s, each
 
-The same ``Schedule`` is executed by two backends (see transport.py):
+  * per-rank **gather** indices (which rows of the local working buffer
+    are packed into the outgoing message; -1 pads with zeros),
+  * a static partial **permutation** of (src, dst) rank pairs,
+  * per-rank **scatter** indices (where received slots land; -1 drops),
+  * an optional ``reduce`` flag (received slots accumulate instead of
+    overwrite).
 
-  * ``SimTransport``    — numpy rank-by-rank simulator; exact message/byte
-                          accounting against a ``Topology`` (unit tests,
-                          benchmarks, the alpha-beta cost model).
-  * ``ShardMapTransport`` — the real SPMD executor: ``ppermute`` + gather/
-                          scatter-by-``axis_index`` inside ``shard_map``.
+Dense collectives (allgather/allreduce/reduce_scatter/alltoall — block
+tables), neighborhood alltoallv plans (row tables), and partitioned
+transfers (chunk tables) all lower to the same IR and are executed by
+the same two backends (see transport.py):
 
-Buffers are *block-indexed*: shape ``[num_blocks, block...]``.  Collectives
-move whole blocks; ragged (v-variant) payloads are padded to the max block
-and true byte counts are carried in the schedule for accounting.
+  * ``SimTransport``      — numpy rank-by-rank simulator; exact message/
+                            byte accounting against a ``Topology``.
+  * ``ShardMapTransport`` — the real SPMD executor: ``ppermute`` +
+                            gather/scatter-by-``axis_index`` inside
+                            ``shard_map``.
+
+Buffers are *slot-indexed*: shape ``[num_slots, slot...]`` per rank.
+Rounds move whole slots; ragged (v-variant) payloads are padded to the
+max slot and true element counts are carried per round (``payload``)
+for accounting.
+
+Invariant validation is O(nranks^2) python per round; it is gated by
+the ``REPRO_VALIDATE_SCHEDULES`` env var (off by default so large-mesh
+plan builds stay cheap; the test suite turns it on via conftest.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Sequence
 
 import numpy as np
@@ -30,129 +46,218 @@ import numpy as np
 from repro.core.topology import Topology
 
 
-@dataclasses.dataclass(frozen=True)
-class Round:
-    """One communication round.
+def validate_schedules_enabled() -> bool:
+    """True when CommRound invariants should be checked at build time."""
+    v = os.environ.get("REPRO_VALIDATE_SCHEDULES", "0").strip().lower()
+    return v not in ("", "0", "false", "off", "no")
 
-    perm:        static list of (src, dst) rank pairs (a partial matching in
-                 rank space — each src sends once, each dst receives once).
-    send_blocks: int array [nranks, k]; row r = block indices rank r sends
-                 this round (-1 entries send a zero/dummy block).
-    recv_blocks: int array [nranks, k]; row r = destination block slots for
-                 what rank r receives (-1 entries are dropped).
-    reduce:      if True received blocks are added into the buffer,
+
+class NotApplicable(AssertionError):
+    """An algorithm builder cannot serve this topology (e.g. a
+    power-of-2-only variant on 12 ranks).  Subclasses AssertionError so
+    historical ``except AssertionError`` call sites keep working, while
+    coverage-critical loops (CI smoke, the bit-exactness sweep) can
+    catch *only* this and let genuine invariant violations fail loud."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CommRound:
+    """One communication round of the unified IR.
+
+    perm:        static list of (src, dst) rank pairs (a partial matching
+                 in rank space — each src sends once, each dst receives
+                 once; (r, r) self-pairs are legal and model on-chip
+                 copies that never touch the wire).
+    gather_idx:  int array [nranks, k]; row r = working-buffer rows rank r
+                 packs into its outgoing message (-1 entries send zeros).
+    scatter_idx: int array [nranks, k]; row r = landing rows for what
+                 rank r receives (-1 entries are dropped).
+    reduce:      if True received slots are added into the buffer,
                  otherwise they overwrite.
+    payload:     optional int array [nranks]; true (unpadded) slot counts
+                 per source, for ragged accounting.  Execution always
+                 moves k padded slots.
     """
 
     perm: tuple[tuple[int, int], ...]
-    send_blocks: np.ndarray
-    recv_blocks: np.ndarray
+    gather_idx: np.ndarray
+    scatter_idx: np.ndarray
     reduce: bool = False
+    payload: np.ndarray | None = None
 
     def __post_init__(self):
-        assert self.send_blocks.shape == self.recv_blocks.shape
+        if not validate_schedules_enabled():
+            return
+        assert self.gather_idx.shape == self.scatter_idx.shape
         srcs = [s for s, _ in self.perm]
         dsts = [d for _, d in self.perm]
         assert len(set(srcs)) == len(srcs), "duplicate src in perm"
         assert len(set(dsts)) == len(dsts), "duplicate dst in perm"
-        # Non-destination ranks must carry an all -1 recv row, so that the
-        # numpy simulator and the ppermute executor agree bit-for-bit
-        # (ppermute hands zeros to non-destinations; the -1 row routes those
-        # zeros to the scratch slot instead of clobbering real blocks).
+        # Non-destination ranks must carry an all -1 scatter row, so that
+        # the numpy simulator and the ppermute executor agree bit-for-bit
+        # (ppermute hands zeros to non-destinations; the -1 row routes
+        # those zeros to the scratch slot instead of clobbering real
+        # slots).
         dst_set = set(dsts)
-        for r in range(self.recv_blocks.shape[0]):
+        for r in range(self.scatter_idx.shape[0]):
             if r not in dst_set:
-                assert (self.recv_blocks[r] < 0).all(), (
+                assert (self.scatter_idx[r] < 0).all(), (
                     f"rank {r} is not a destination this round but has a "
-                    f"live recv row {self.recv_blocks[r]}")
-        # A destination's live recv slots must be distinct (scatter safety).
+                    f"live scatter row {self.scatter_idx[r]}")
+        # A destination's live scatter slots must be distinct (scatter
+        # safety: .at[].set with duplicate targets is order-dependent).
         for _, d in self.perm:
-            live = self.recv_blocks[d][self.recv_blocks[d] >= 0]
+            live = self.scatter_idx[d][self.scatter_idx[d] >= 0]
             assert len(set(live.tolist())) == len(live), (
-                f"rank {d} has duplicate recv slots {live}")
+                f"rank {d} has duplicate scatter slots {live}")
 
     @property
     def k(self) -> int:
-        return self.send_blocks.shape[1]
+        return self.gather_idx.shape[1]
+
+    # historical aliases (block-table vocabulary of the dense stack)
+    width = k
+
+    @property
+    def send_blocks(self) -> np.ndarray:
+        return self.gather_idx
+
+    @property
+    def recv_blocks(self) -> np.ndarray:
+        return self.scatter_idx
+
+    def edge_slots(self, src: int) -> int:
+        """True slots ``src`` ships this round (payload-aware)."""
+        if self.payload is not None:
+            return int(self.payload[src])
+        return int((self.gather_idx[src] >= 0).sum())
 
 
 @dataclasses.dataclass(frozen=True)
-class Schedule:
-    """A compiled collective: rounds + buffer geometry.
+class CommSchedule:
+    """A compiled communication pattern: rounds + buffer geometry.
 
-    num_blocks:  leading axis of the working buffer.
-    block_bytes: optional per-block true byte counts [num_blocks] for
+    num_slots:   leading axis of the working buffer (excl. the scratch
+                 slot transports append internally).
+    slot_bytes:  optional per-slot true byte counts [num_slots] for
                  ragged payloads (accounting only; execution is padded).
-    local_pre:   optional [nranks, num_blocks] slot permutation applied
-                 before round 0 (new_buf[s] = buf[local_pre[r, s]]); free —
-                 a local shuffle, no messages (Bruck rotation phase).
+    local_pre:   optional [nranks, num_slots] slot permutation applied
+                 before round 0 (new_buf[s] = buf[local_pre[r, s]]); free
+                 — a local shuffle, no messages (Bruck rotation phase).
     local_post:  same, applied after the last round.
-    out_blocks:  number of leading blocks that constitute the result after
-                 local_post (schedules with separate send/recv regions set
-                 this < num_blocks, like MPI send/recv buffer pairs).
+    out_slots:   number of slots that constitute the result after
+                 local_post (schedules with separate send/recv regions
+                 set this < num_slots, like MPI send/recv buffer pairs).
+    out_offsets: optional per-rank [nranks] start row of the result
+                 region (neighborhood plans land recv segments mid-
+                 buffer; dense collectives leave this None = row 0).
     """
 
     nranks: int
-    num_blocks: int
-    rounds: tuple[Round, ...]
+    num_slots: int
+    rounds: tuple[CommRound, ...]
     name: str = "schedule"
-    block_bytes: np.ndarray | None = None
+    slot_bytes: np.ndarray | None = None
     local_pre: np.ndarray | None = None
     local_post: np.ndarray | None = None
-    out_blocks: int | None = None
+    out_slots: int | None = None
+    out_offsets: np.ndarray | None = None
+
+    @property
+    def result_slots(self) -> int:
+        return self.num_slots if self.out_slots is None else self.out_slots
+
+    def out_offset(self, rank: int) -> int:
+        return 0 if self.out_offsets is None else int(self.out_offsets[rank])
+
+    # historical aliases (block vocabulary of the dense stack)
+    @property
+    def num_blocks(self) -> int:
+        return self.num_slots
 
     @property
     def result_blocks(self) -> int:
-        return self.num_blocks if self.out_blocks is None else self.out_blocks
+        return self.result_slots
+
+    @property
+    def block_bytes(self) -> np.ndarray | None:
+        return self.slot_bytes
 
     # -- accounting (validates the paper's message/byte-count claims) ------
+    def _edges(self, topo: Topology | None, local: bool | None):
+        """Live wire edges (src, dst, true_slots); self-pairs and empty
+        payloads never hit the wire and are excluded."""
+        for rnd in self.rounds:
+            for s, d in rnd.perm:
+                if s == d:
+                    continue
+                slots = rnd.edge_slots(s)
+                if slots == 0:
+                    continue
+                if topo is not None and local is not None:
+                    if topo.is_local(s, d) != local:
+                        continue
+                yield rnd, s, d, slots
+
     def message_count(self, topo: Topology | None = None,
                       local: bool | None = None) -> int:
         """Total point-to-point messages; filter by link class if asked."""
-        n = 0
-        for rnd in self.rounds:
-            for s, d in rnd.perm:
-                if topo is not None and local is not None:
-                    if topo.is_local(s, d) != local:
-                        continue
-                n += 1
-        return n
+        return sum(1 for _ in self._edges(topo, local))
 
     def byte_count(self, elem_bytes: int, topo: Topology | None = None,
                    local: bool | None = None) -> int:
-        """Total bytes moved (true counts if block_bytes set)."""
+        """Total bytes moved (true counts if slot_bytes/payload set)."""
         total = 0
-        for rnd in self.rounds:
-            for i, (s, d) in enumerate(rnd.perm):
-                if topo is not None and local is not None:
-                    if topo.is_local(s, d) != local:
-                        continue
-                blocks = rnd.send_blocks[s]
-                for b in blocks:
-                    if b < 0:
-                        continue
-                    if self.block_bytes is not None:
-                        total += int(self.block_bytes[b])
-                    else:
-                        total += elem_bytes
+        for rnd, s, d, slots in self._edges(topo, local):
+            if rnd.payload is None and self.slot_bytes is not None:
+                for b in rnd.gather_idx[s]:
+                    if b >= 0:
+                        total += int(self.slot_bytes[b])
+            else:
+                total += slots * elem_bytes
         return total
 
-    def modeled_time(self, topo: Topology, block_nbytes: int) -> float:
-        """alpha-beta model: rounds serialize, edges within a round overlap."""
-        return sum(topo.round_time(r.perm, block_nbytes * r.k)
-                   for r in self.rounds)
+    def traffic(self, topo: Topology, elem_bytes: int = 1) -> dict:
+        """Per-link-class bytes and message counts (the paper's
+        aggregation claims: locality-aware plans cut DCN bytes/msgs)."""
+        out = {"ici": 0, "dcn": 0, "msgs_ici": 0, "msgs_dcn": 0}
+        for rnd, s, d, slots in self._edges(topo, None):
+            key = "ici" if topo.is_local(s, d) else "dcn"
+            out[key] += slots * elem_bytes
+            out["msgs_" + key] += 1
+        return out
+
+    def modeled_time(self, topo: Topology, slot_nbytes: int) -> float:
+        """alpha-beta model: rounds serialize, edges within a round
+        overlap.  Rounds without ``payload`` move k padded slots per
+        edge (dense block tables); payload-bearing rounds (ragged
+        neighbor exchanges) use true per-source counts."""
+        total = 0.0
+        for rnd in self.rounds:
+            if rnd.payload is None:
+                total += topo.round_time(rnd.perm, slot_nbytes * rnd.k)
+            else:
+                per_edge = [rnd.edge_slots(s) * slot_nbytes
+                            for s, _ in rnd.perm]
+                total += topo.round_time(rnd.perm, per_edge)
+        return total
 
     @property
     def num_rounds(self) -> int:
         return len(self.rounds)
 
 
+# Back-compat aliases: the pre-unification dense stack exported these.
+Round = CommRound
+Schedule = CommSchedule
+
+
 def make_round(nranks: int,
                edges: Sequence[tuple[int, int]],
                send_blocks: dict[int, Sequence[int]],
                recv_blocks: dict[int, Sequence[int]],
-               reduce: bool = False) -> Round:
-    """Build a Round from per-rank block lists (ragged -> padded with -1)."""
+               reduce: bool = False) -> CommRound:
+    """Build a CommRound from per-rank slot lists (ragged -> padded -1)."""
     k = max((len(v) for v in send_blocks.values()), default=0)
     k = max(k, max((len(v) for v in recv_blocks.values()), default=0))
     k = max(k, 1)
@@ -162,5 +267,5 @@ def make_round(nranks: int,
         sb[r, : len(blocks)] = blocks
     for r, blocks in recv_blocks.items():
         rb[r, : len(blocks)] = blocks
-    return Round(perm=tuple((int(s), int(d)) for s, d in edges),
-                 send_blocks=sb, recv_blocks=rb, reduce=reduce)
+    return CommRound(perm=tuple((int(s), int(d)) for s, d in edges),
+                     gather_idx=sb, scatter_idx=rb, reduce=reduce)

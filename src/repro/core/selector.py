@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import functools
 
+from repro.core.schedule import NotApplicable
 from repro.core.topology import Topology
 
 # Paper-faithful fixed defaults: log-step algorithms for small payloads
@@ -45,6 +46,10 @@ _LOG_STEP = {
 
 POLICIES = ("fixed", "model", "tuned")
 
+# The two build modes of a neighborhood exchange (plan.build_plan).
+NEIGHBOR = "neighbor_alltoallv"
+NEIGHBOR_MODES = ("standard", "locality_aware")
+
 
 def select(collective: str, topo: Topology, nbytes: int,
            policy: str = "model", tuned_table=None) -> str:
@@ -61,21 +66,68 @@ def select(collective: str, topo: Topology, nbytes: int,
         if name is not None:
             return name
         # no persisted table for this substrate: model argmin fallback
-    return _model_select(collective, topo.nranks, topo.ranks_per_pod,
-                         int(nbytes))
+    return _model_select(collective, topo, int(nbytes))
+
+
+def resolve_neighbor_mode(graph, topo: Topology, *,
+                          policy: str | None = None, tuned_table=None,
+                          elem_bytes: int = 4) -> str | None:
+    """Cheap half of the neighbor mode choice: resolve from policy and
+    persisted tables alone, WITHOUT compiling any plan.  Returns None
+    when the decision needs the alpha-beta model comparison of both
+    compiled plans (the caller — ``build_plan`` — already has to build
+    the winner, so it builds both and compares, instead of this layer
+    compiling and discarding them)."""
+    if policy is None:
+        from repro.core import api  # local: avoid import cycle
+        policy = api.get_default_policy()
+    if policy not in POLICIES:
+        raise ValueError(f"unknown selection policy {policy!r}; "
+                         f"expected one of {POLICIES}")
+    if topo.npods == 1:
+        return "standard"            # both modes compile identically
+    if policy == "fixed":
+        return "locality_aware"
+    if policy == "tuned":
+        from repro.core import tuner
+        nbytes = graph.total_values() * elem_bytes
+        name = tuner.tuned_select(NEIGHBOR, topo, int(nbytes),
+                                  table=tuned_table)
+        if name in NEIGHBOR_MODES:
+            return name
+    return None
+
+
+def select_neighbor(graph, topo: Topology, *, policy: str | None = None,
+                    tuned_table=None, elem_bytes: int = 4) -> str:
+    """Standard-vs-locality-aware choice for a neighborhood exchange.
+
+    Same policy ladder as ``select``: "fixed" is the paper default
+    (aggregate whenever the topology is multi-pod), "tuned" reads the
+    winner ``tuner.autotune`` persisted for this substrate and exchange
+    volume, "model" compares the alpha-beta times of both compiled
+    plans.  ``policy=None`` uses the process-wide default policy.
+    """
+    mode = resolve_neighbor_mode(graph, topo, policy=policy,
+                                 tuned_table=tuned_table,
+                                 elem_bytes=elem_bytes)
+    if mode is not None:
+        return mode
+    from repro.core.plan import model_argmin_plan
+    plan = model_argmin_plan(graph, topo, elem_bytes=elem_bytes)
+    return ("locality_aware" if plan.name.endswith("locality_aware")
+            else "standard")
 
 
 @functools.lru_cache(maxsize=None)
-def _model_select(collective: str, nranks: int, ranks_per_pod: int,
-                  nbytes: int) -> str:
+def _model_select(collective: str, topo: Topology, nbytes: int) -> str:
     from repro.core.algorithms import REGISTRY  # local: avoid import cycle
 
-    topo = Topology(nranks=nranks, ranks_per_pod=ranks_per_pod)
     best_name, best_t = None, float("inf")
     for name, builder in REGISTRY[collective].items():
         try:
             sched = builder(topo)
-        except AssertionError:  # e.g. power-of-2-only algorithms
+        except NotApplicable:   # e.g. power-of-2-only algorithms
             continue
         block_nbytes = max(1, nbytes // max(1, sched.num_blocks))
         t = sched.modeled_time(topo, block_nbytes)
@@ -93,7 +145,7 @@ def modeled_times(collective: str, topo: Topology, nbytes: int) -> dict:
     for name, builder in REGISTRY[collective].items():
         try:
             sched = builder(topo)
-        except AssertionError:
+        except NotApplicable:
             continue
         out[name] = sched.modeled_time(
             topo, max(1, nbytes // max(1, sched.num_blocks)))

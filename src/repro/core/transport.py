@@ -1,19 +1,25 @@
-"""Transport backends that execute a ``Schedule`` (see schedule.py).
+"""Transport backends that execute a ``CommSchedule`` (see schedule.py).
 
 MPI Advance writes every collective algorithm once, against MPI point-to-
 point primitives, and runs it on any substrate.  We keep the same split:
+one IR (``CommSchedule``: gather tables -> static permutation -> scatter
+tables), two executors:
 
-  * ``SimTransport``      — numpy, rank-by-rank.  Bit-exact execution of a
-                            schedule for N simulated ranks on zero devices.
-                            Used by unit/property tests and by the
-                            message/byte accounting benchmarks.
-  * ``ShardMapTransport`` — the production substrate: each ``Round`` becomes
-                            one ``jax.lax.ppermute`` (the TPU ICI
+  * ``SimTransport``      — numpy, rank-by-rank.  Bit-exact execution of
+                            a schedule for N simulated ranks on zero
+                            devices.  Used by unit/property tests and by
+                            the message/byte accounting benchmarks.
+  * ``ShardMapTransport`` — the production substrate: each ``CommRound``
+                            becomes one ``jax.lax.ppermute`` (the TPU ICI
                             point-to-point primitive) inside ``shard_map``.
 
-Buffers are block-indexed: the working array has shape
-``[num_blocks + 1, *block_shape]`` on every rank — the final slot is a
-scratch block that absorbs sends/receives masked out with ``-1`` in the
+Dense collectives, neighborhood alltoallv plans, and partitioned
+transfers all execute through these two classes — there is exactly one
+execution semantics to keep bit-identical.
+
+Buffers are slot-indexed: the working array has shape
+``[num_slots + 1, *slot_shape]`` on every rank — the final slot is a
+scratch row that absorbs sends/receives masked out with ``-1`` in the
 schedule tables, so execution is fully static (no data-dependent control
 flow, as required for TPU lowering).
 """
@@ -27,7 +33,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedule import Round, Schedule
+from repro.core.schedule import CommRound, CommSchedule
 
 from repro import compat
 
@@ -38,8 +44,8 @@ class Transport(abc.ABC):
     nranks: int
 
     @abc.abstractmethod
-    def run(self, schedule: Schedule, buf):
-        """Execute ``schedule`` on a block-indexed buffer and return it."""
+    def run(self, schedule: CommSchedule, buf):
+        """Execute ``schedule`` on a slot-indexed buffer and return it."""
 
 
 # ---------------------------------------------------------------------------
@@ -48,21 +54,22 @@ class Transport(abc.ABC):
 
 
 class SimTransport(Transport):
-    """Rank-by-rank numpy execution: ``buf`` is [nranks, num_blocks, *block].
+    """Rank-by-rank numpy execution: ``buf`` is [nranks, num_slots, *slot].
 
     Exact semantics match ShardMapTransport:
       * a rank that is not a destination in a round receives zeros,
-      * send block -1 sends zeros,
-      * recv slot -1 drops the received block,
-      * ``reduce=True`` accumulates (+=) instead of overwriting.
+      * gather index -1 sends zeros,
+      * scatter index -1 drops the received slot,
+      * ``reduce=True`` accumulates (+=) instead of overwriting,
+      * (r, r) self-pairs deliver the rank's own payload (on-chip copy).
     """
 
     def __init__(self, nranks: int):
         self.nranks = nranks
 
-    def run(self, schedule: Schedule, buf: np.ndarray) -> np.ndarray:
+    def run(self, schedule: CommSchedule, buf: np.ndarray) -> np.ndarray:
         assert buf.shape[0] == self.nranks, (buf.shape, self.nranks)
-        assert buf.shape[1] == schedule.num_blocks
+        assert buf.shape[1] == schedule.num_slots
         buf = buf.copy()
         if schedule.local_pre is not None:
             buf = np.stack([buf[r, schedule.local_pre[r]]
@@ -74,24 +81,24 @@ class SimTransport(Transport):
                             for r in range(self.nranks)])
         return buf
 
-    def _round(self, rnd: Round, buf: np.ndarray) -> np.ndarray:
-        block_shape = buf.shape[2:]
+    def _round(self, rnd: CommRound, buf: np.ndarray) -> np.ndarray:
+        slot_shape = buf.shape[2:]
         # Everyone starts this round receiving zeros (ppermute semantics).
-        inbox = np.zeros((self.nranks, rnd.k) + block_shape, buf.dtype)
+        inbox = np.zeros((self.nranks, rnd.k) + slot_shape, buf.dtype)
         for src, dst in rnd.perm:
-            send = rnd.send_blocks[src]
-            payload = np.zeros((rnd.k,) + block_shape, buf.dtype)
-            valid = send >= 0
-            payload[valid] = buf[src, send[valid]]
+            gather = rnd.gather_idx[src]
+            payload = np.zeros((rnd.k,) + slot_shape, buf.dtype)
+            valid = gather >= 0
+            payload[valid] = buf[src, gather[valid]]
             inbox[dst] = payload
         out = buf.copy()
+        dst_set = {d for _, d in rnd.perm}
         for r in range(self.nranks):
-            recv = rnd.recv_blocks[r]
-            is_dst = any(d == r for _, d in rnd.perm)
-            if not is_dst:
+            if r not in dst_set:
                 continue
+            scatter = rnd.scatter_idx[r]
             for slot in range(rnd.k):
-                tgt = recv[slot]
+                tgt = scatter[slot]
                 if tgt < 0:
                     continue
                 if rnd.reduce:
@@ -119,8 +126,8 @@ class ShardMapTransport(Transport):
 
     ``run`` must be called from *inside* a shard_map whose manual axes
     include ``axis_names`` (row-major order defines the flat rank, matching
-    the Schedule's rank numbering).  ``buf`` here is the *local* buffer,
-    shape [num_blocks, *block], and one scratch slot is appended
+    the CommSchedule's rank numbering).  ``buf`` here is the *local*
+    buffer, shape [num_slots, *slot], and one scratch slot is appended
     internally.
     """
 
@@ -129,16 +136,16 @@ class ShardMapTransport(Transport):
         self.axis_names = ((axis_names,) if isinstance(axis_names, str)
                            else tuple(axis_names))
 
-    def run(self, schedule: Schedule, buf: jax.Array) -> jax.Array:
-        assert buf.shape[0] == schedule.num_blocks
+    def run(self, schedule: CommSchedule, buf: jax.Array) -> jax.Array:
+        assert buf.shape[0] == schedule.num_slots
         rank = _flat_rank(self.axis_names)
         if schedule.local_pre is not None:
             buf = buf[jnp.asarray(schedule.local_pre, jnp.int32)[rank]]
         scratch = jnp.zeros((1,) + buf.shape[1:], buf.dtype)
         x = jnp.concatenate([buf, scratch], axis=0)
         for rnd in schedule.rounds:
-            x = self._round(rnd, x, rank, schedule.num_blocks)
-        out = x[: schedule.num_blocks]
+            x = self._round(rnd, x, rank, schedule.num_slots)
+        out = x[: schedule.num_slots]
         if schedule.local_post is not None:
             out = out[jnp.asarray(schedule.local_post, jnp.int32)[rank]]
         return out
@@ -146,20 +153,20 @@ class ShardMapTransport(Transport):
     def _axis_arg(self):
         return self.axis_names if len(self.axis_names) > 1 else self.axis_names[0]
 
-    def _round(self, rnd: Round, x: jax.Array, rank, nb: int) -> jax.Array:
+    def _round(self, rnd: CommRound, x: jax.Array, rank, nb: int) -> jax.Array:
         kdims = (rnd.k,) + (1,) * (x.ndim - 1)
-        send_tbl = jnp.asarray(rnd.send_blocks, jnp.int32)  # [nranks, k]
-        recv_tbl = jnp.asarray(rnd.recv_blocks, jnp.int32)
-        my_send = send_tbl[rank]                             # [k]
-        my_recv = recv_tbl[rank]
-        # Gather payload; -1 slots read the scratch block and are zeroed.
-        payload = x[jnp.where(my_send >= 0, my_send, nb)]
-        payload = jnp.where((my_send >= 0).reshape(kdims), payload, 0)
+        gather_tbl = jnp.asarray(rnd.gather_idx, jnp.int32)  # [nranks, k]
+        scatter_tbl = jnp.asarray(rnd.scatter_idx, jnp.int32)
+        my_gather = gather_tbl[rank]                          # [k]
+        my_scatter = scatter_tbl[rank]
+        # Gather payload; -1 slots read the scratch row and are zeroed.
+        payload = x[jnp.where(my_gather >= 0, my_gather, nb)]
+        payload = jnp.where((my_gather >= 0).reshape(kdims), payload, 0)
         recvd = jax.lax.ppermute(payload, self._axis_arg(), list(rnd.perm))
-        # Scatter: -1 recv slots land on the scratch block (index nb).
-        tgt = jnp.where(my_recv >= 0, my_recv, nb)
+        # Scatter: -1 slots land on the scratch row (index nb).
+        tgt = jnp.where(my_scatter >= 0, my_scatter, nb)
         if rnd.reduce:
-            masked = jnp.where((my_recv >= 0).reshape(kdims), recvd, 0)
+            masked = jnp.where((my_scatter >= 0).reshape(kdims), recvd, 0)
             x = x.at[tgt].add(masked)
         else:
             # distinct targets per slot by construction (schedule invariant)

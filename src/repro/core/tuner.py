@@ -47,9 +47,14 @@ import numpy as np
 import jax
 
 from repro import compat
+# the neighbor vocabulary is shared with the selection layer (one source)
+from repro.core.schedule import NotApplicable
+from repro.core.selector import NEIGHBOR, NEIGHBOR_MODES
 from repro.core.topology import Topology
 
 COLLECTIVES = ("allgather", "allreduce", "reduce_scatter", "alltoall")
+# non-dense paths tuned through the generic CommSchedule timer
+PARTITIONED = "partitioned"
 DEFAULT_SIZES = (1 << 10, 1 << 14, 1 << 18, 1 << 22)   # bytes per rank
 _AXIS = "tune"          # mesh axis name used for measurement runs
 _ELEM = 4               # measurement payloads are float32
@@ -218,6 +223,54 @@ def _modeled(sched, topo: Topology, nbytes: int) -> float:
     return sched.modeled_time(topo, block)
 
 
+# ---------------------------------------------------------------------------
+# generic CommSchedule timing (any path: dense, neighbor, partitioned)
+# ---------------------------------------------------------------------------
+
+
+def measure_schedule(schedule, topo: Topology, *, slot_elems: int = 1,
+                     repeats: int = 3, fill=None) -> float:
+    """Wall clock of one ``CommSchedule`` executed by ShardMapTransport
+    under jit on the live mesh (requires >= topo.nranks devices).
+
+    Works for every schedule the IR can express — dense block tables,
+    neighborhood plans, partitioned transfers — which is what lets one
+    tuner cover every path.  ``slot_elems`` is the float32 width of one
+    buffer slot; ``fill`` optionally seeds the per-rank buffers.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.core.transport import ShardMapTransport
+
+    n = topo.nranks
+    if jax.device_count() < n:
+        raise RuntimeError(f"need {n} devices, have {jax.device_count()}")
+    mesh = compat.make_mesh((n,), (_AXIS,), devices=jax.devices()[:n])
+    transport = ShardMapTransport(n, _AXIS)
+    f = jax.jit(compat.shard_map(
+        lambda b: transport.run(schedule, b), mesh=mesh,
+        in_specs=P(_AXIS), out_specs=P(_AXIS), check_vma=False))
+    x = (np.ones((n * schedule.num_slots, slot_elems), np.float32)
+         if fill is None else fill)
+    jax.block_until_ready(f(x))            # compile + warm the caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(x))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def schedule_time(schedule, topo: Topology, *, slot_nbytes: int,
+                  repeats: int = 3, force_model: bool = False) -> float:
+    """Time any CommSchedule: measured on the live mesh when it fits,
+    alpha-beta ``CommSchedule.modeled_time`` otherwise."""
+    if not force_model and jax.device_count() >= topo.nranks:
+        return measure_schedule(
+            schedule, topo, slot_elems=max(1, slot_nbytes // _ELEM),
+            repeats=repeats)
+    return schedule.modeled_time(topo, slot_nbytes)
+
+
 def tune(topo: Topology, *, collectives=COLLECTIVES, sizes=DEFAULT_SIZES,
          repeats: int = 3, include_xla: bool = True,
          force_model: bool = False, tol: float = 1.10) -> TunedTable:
@@ -237,7 +290,7 @@ def tune(topo: Topology, *, collectives=COLLECTIVES, sizes=DEFAULT_SIZES,
         for name, builder in REGISTRY[coll].items():
             try:
                 candidates[name] = builder(topo)
-            except AssertionError:       # e.g. power-of-2-only variants
+            except NotApplicable:        # e.g. power-of-2-only variants
                 continue
         per: dict = {}
         for nbytes in sizes:
@@ -268,6 +321,101 @@ def tune(topo: Topology, *, collectives=COLLECTIVES, sizes=DEFAULT_SIZES,
 
 
 # ---------------------------------------------------------------------------
+# neighbor + partitioned paths (generic CommSchedule timing)
+# ---------------------------------------------------------------------------
+
+
+def tune_neighbor(topo: Topology, *, sizes=DEFAULT_SIZES, repeats: int = 3,
+                  force_model: bool = False, graph=None, n_local: int = 8,
+                  dup_frac: float = 0.5) -> dict:
+    """Per-size-bucket winners for the standard-vs-locality-aware choice.
+
+    Times both compiled plans of a representative sparse exchange
+    (seeded ``CommGraph.random`` unless ``graph`` is given) through the
+    shared transports; buckets key on the exchange's total standard-plan
+    byte volume, which is what ``selector.select_neighbor`` looks up.
+    Returns the ``entries[NEIGHBOR]`` dict.
+    """
+    from repro.core.plan import CommGraph, build_plan
+
+    n = topo.nranks
+    if graph is None:
+        rng = np.random.default_rng(0)
+        graph = CommGraph.random(n, n_local=n_local,
+                                 degree=min(n - 1, 4), rng=rng,
+                                 dup_frac=dup_frac)
+    total_rows = graph.total_values()
+    plans = {mode: build_plan(graph, topo,
+                              aggregate=mode == "locality_aware")
+             for mode in NEIGHBOR_MODES}
+    per: dict = {}
+    for nbytes in sizes:
+        slot_nbytes = _ELEM * max(1, int(nbytes) // (total_rows * _ELEM))
+        times = {
+            mode: schedule_time(plan.schedule, topo,
+                                slot_nbytes=slot_nbytes, repeats=repeats,
+                                force_model=force_model)
+            for mode, plan in plans.items()
+        }
+        # key on the requested probe size (like every other path) so two
+        # sizes never collapse into one bucket when slot_nbytes floors
+        # on a large graph; "nbytes" records the actual probed volume
+        per[str(size_bucket(int(nbytes)))] = {
+            "best": min(times, key=times.get),
+            "nbytes": total_rows * slot_nbytes,
+            "times": {k: float(v) for k, v in times.items()},
+        }
+    return per
+
+
+def tune_partitioned(topo: Topology, *, sizes=DEFAULT_SIZES,
+                     repeats: int = 3, force_model: bool = False) -> dict:
+    """Per-size-bucket winners for the MPIPCL partition-count choice
+    (REGISTRY["partitioned"]: p1/p2/p4/p8 chunked shifts)."""
+    from repro.core.algorithms import REGISTRY
+
+    per: dict = {}
+    for nbytes in sizes:
+        times: dict = {}
+        for name, builder in REGISTRY[PARTITIONED].items():
+            sched = builder(topo)
+            chunks = sched.result_slots
+            slot_nbytes = max(1, int(nbytes) // chunks)
+            times[name] = schedule_time(
+                sched, topo, slot_nbytes=slot_nbytes, repeats=repeats,
+                force_model=force_model)
+        per[str(size_bucket(int(nbytes)))] = {
+            "best": min(times, key=times.get),
+            "nbytes": int(nbytes),
+            "times": {k: float(v) for k, v in times.items()},
+        }
+    return per
+
+
+def autotune(topo: Topology, *, path: str | Path | None = None,
+             sizes=DEFAULT_SIZES, repeats: int = 3,
+             force_model: bool = False, tol: float = 1.10,
+             include_xla: bool = True) -> TunedTable:
+    """Tune every path — dense collectives, the neighborhood
+    standard-vs-locality-aware crossover, partitioned chunk counts —
+    into one persisted table for this substrate.
+
+    This is the one-stop entry the launchers call: after it returns,
+    ``policy="tuned"`` resolves every mpix_* collective *and*
+    ``build_plan(..., aggregate=None)`` from measured winners.
+    """
+    table = tune(topo, sizes=sizes, repeats=repeats,
+                 include_xla=include_xla, force_model=force_model, tol=tol)
+    table.entries[NEIGHBOR] = tune_neighbor(
+        topo, sizes=sizes, repeats=repeats, force_model=force_model)
+    table.entries[PARTITIONED] = tune_partitioned(
+        topo, sizes=sizes, repeats=repeats, force_model=force_model)
+    table.violations = verify_guidelines(table, topo, tol=tol)
+    save_table(table, path=path)
+    return table
+
+
+# ---------------------------------------------------------------------------
 # performance guidelines (Hunold-style self-consistency checks)
 # ---------------------------------------------------------------------------
 
@@ -282,6 +430,9 @@ def verify_guidelines(table: TunedTable, topo: Topology | None = None,
       * specialized <= generic: on multi-pod topologies the
         locality-aware ``hierarchical`` variant should not lose to the
         flat default for the largest probed bucket
+      * neighbor aggregation: on multi-pod topologies the
+        locality-aware plan should not lose to the standard plan for
+        the largest probed bucket (aggregate <= standard)
     """
     out: list = []
     e = table.entries
@@ -330,6 +481,19 @@ def verify_guidelines(table: TunedTable, topo: Topology | None = None,
                     f"{flat_default} @bucket {b} on multi-pod topo "
                     f"({times['hierarchical']:.3e} > "
                     f"{times[flat_default]:.3e})")
+
+    # neighbor: aggregate <= standard on multi-pod (largest bucket)
+    if topo is not None and topo.npods > 1 and e.get(NEIGHBOR):
+        per = e[NEIGHBOR]
+        b = max(per, key=int)
+        times = per[b]["times"]
+        if ("locality_aware" in times and "standard" in times
+                and times["locality_aware"] > tol * times["standard"]):
+            out.append(
+                f"{NEIGHBOR}.locality_aware slower than standard "
+                f"@bucket {b} on multi-pod topo "
+                f"({times['locality_aware']:.3e} > "
+                f"{times['standard']:.3e})")
     return out
 
 
@@ -358,6 +522,8 @@ def tuned_select(collective: str, topo: Topology, nbytes: int,
     name = table.lookup(collective, nbytes)
     if name is None or name == "xla":
         return name
+    if collective == NEIGHBOR:
+        return name if name in NEIGHBOR_MODES else None
     # registry-membership check only: the fingerprint guarantees the
     # table's topology matches the query, so the winner built for it at
     # tuning time — only a renamed/removed algorithm can be stale here
@@ -396,6 +562,8 @@ def main(argv=None):
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--model", action="store_true",
                     help="force the alpha-beta model (no devices needed)")
+    ap.add_argument("--dense-only", action="store_true",
+                    help="skip the neighbor/partitioned paths")
     ap.add_argument("--out", default=None, help="cache file to write")
     args = ap.parse_args(argv)
 
@@ -403,9 +571,14 @@ def main(argv=None):
                     ranks_per_pod=args.ranks_per_pod or args.nranks)
     sizes = (tuple(int(s) for s in args.sizes.split(","))
              if args.sizes else DEFAULT_SIZES)
-    table = tune(topo, sizes=sizes, repeats=args.repeats,
-                 force_model=args.model)
-    path = save_table(table, path=args.out)
+    if args.dense_only:
+        table = tune(topo, sizes=sizes, repeats=args.repeats,
+                     force_model=args.model)
+        path = save_table(table, path=args.out)
+    else:
+        table = autotune(topo, path=args.out, sizes=sizes,
+                         repeats=args.repeats, force_model=args.model)
+        path = default_cache_path() if args.out is None else Path(args.out)
     print(f"fingerprint {table.fingerprint} ({table.source}) -> {path}")
     for coll, per in table.entries.items():
         for b in sorted(per, key=int):

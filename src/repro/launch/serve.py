@@ -33,6 +33,10 @@ def main(argv=None):
                     help="algorithm selection policy for algorithm="
                          "'auto' collectives (tuned reads the persisted "
                          "tuner table; see repro.core.tuner)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run tuner.autotune for this mesh before "
+                         "serving (persists winners for "
+                         "--select-policy tuned)")
     args = ap.parse_args(argv)
 
     mpix_api.set_default_policy(args.select_policy)
@@ -43,6 +47,9 @@ def main(argv=None):
         mesh = compat.make_mesh((n, 1), ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    if args.autotune:
+        from repro.launch.train import autotune_mesh
+        autotune_mesh(mesh)
 
     max_len = args.prompt_len + args.gen
     with compat.set_mesh(mesh):

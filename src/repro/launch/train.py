@@ -39,10 +39,56 @@ def build(args):
     opts = TrainOptions(
         dp_mode=args.dp_mode, dp_algorithm=args.dp_algorithm,
         grad_buckets=args.grad_buckets, moe_mode=args.moe_mode,
-        ep_alltoall=args.ep_alltoall, remat=not args.smoke,
+        ep_alltoall=args.ep_alltoall, ep_policy=args.select_policy,
+        remat=not args.smoke,
         peak_lr=args.lr, warmup_steps=max(1, args.steps // 20),
         total_steps=args.steps)
     return cfg, mesh, opts
+
+
+def mesh_topologies(mesh):
+    """The topologies runtime collectives actually query on this mesh.
+
+    A tuned-policy lookup keys on the topology of the *axis subset* a
+    collective runs over (``api.topology_from_axes``), not the whole
+    mesh: dp sync uses ("pod","data")/("data",), MoE EP uses
+    ("pod","model")/("model",), the token rebuild uses ("model",).  So
+    tune one topology per single non-DCN axis plus one per ("pod",
+    axis) pair, deduped — a whole-mesh-only table would never be hit.
+    """
+    from repro.core.topology import Topology, flat_topology
+    topos = {}
+    names = [a for a in mesh.axis_names if a != "pod"]
+    npods = mesh.shape.get("pod", 1) if "pod" in mesh.axis_names else 1
+    for a in names:
+        size = mesh.shape[a]
+        if size > 1:
+            t = flat_topology(size)
+            topos[t.fingerprint()] = t
+            if npods > 1:
+                t = Topology(nranks=npods * size, ranks_per_pod=size)
+                topos[t.fingerprint()] = t
+    if not topos:
+        t = flat_topology(mesh.devices.size)
+        topos[t.fingerprint()] = t
+    return list(topos.values())
+
+
+def autotune_mesh(mesh, repeats: int = 3):
+    """Run ``tuner.autotune`` for every topology this mesh's collectives
+    query at trace time: measures every path (dense collectives,
+    neighbor aggregate-vs-standard, partitioned chunking) and persists
+    winners so ``--select-policy tuned`` resolves from measured data."""
+    from repro.core import tuner
+    tables = []
+    for topo in mesh_topologies(mesh):
+        table = tuner.autotune(topo, repeats=repeats)
+        print(f"autotuned {table.fingerprint} ({table.source}): "
+              f"{sorted(table.entries)}")
+        for v in table.violations:
+            print(f"  guideline violation: {v}")
+        tables.append(table)
+    return tables
 
 
 def main(argv=None):
@@ -63,6 +109,10 @@ def main(argv=None):
                     help="algorithm selection policy for algorithm="
                          "'auto' collectives (tuned reads the persisted "
                          "tuner table; see repro.core.tuner)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run tuner.autotune for this mesh before "
+                         "training (persists dense + neighbor + "
+                         "partitioned winners for --select-policy tuned)")
     ap.add_argument("--grad-buckets", type=int, default=1)
     ap.add_argument("--moe-mode", default="dropless")
     ap.add_argument("--ep-alltoall", default="xla")
@@ -73,6 +123,8 @@ def main(argv=None):
 
     mpix_api.set_default_policy(args.select_policy)
     cfg, mesh, opts = build(args)
+    if args.autotune:
+        autotune_mesh(mesh)
     pipe = DataPipeline(PipelineConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.batch))

@@ -40,6 +40,9 @@ class EPOptions:
     alltoall: str = "xla"           # mpix algorithm for dispatch/return
     allgather: str = "xla"          # rebuild of the token slice
     capacity_factor: float = 1.25
+    policy: str | None = None       # selection policy for "auto" algos
+                                    # (None = process default; "tuned"
+                                    # reads tuner.autotune's table)
 
 
 def ep_axes_for(cfg_moe: MoEConfig, mesh) -> tuple[str, ...]:
@@ -119,7 +122,8 @@ def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
 
     # ship buckets to expert owners (expert e lives on rank e // E_loc)
     send = buckets[: E * C]                                   # [E*C, d]
-    recv = mpix.mpix_alltoall(send, ep, algorithm=opts.alltoall)
+    recv = mpix.mpix_alltoall(send, ep, algorithm=opts.alltoall,
+                              policy=opts.policy)
     tok = recv.reshape(N_ep, E_loc, C, d).transpose(1, 0, 2, 3) \
               .reshape(E_loc, N_ep * C, d)
 
@@ -129,12 +133,14 @@ def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
 
     back = ye.reshape(E_loc, N_ep, C, d).transpose(1, 0, 2, 3) \
              .reshape(N_ep * E_loc * C, d)
-    ret = mpix.mpix_alltoall(back, ep, algorithm=opts.alltoall)
+    ret = mpix.mpix_alltoall(back, ep, algorithm=opts.alltoall,
+                             policy=opts.policy)
 
     gathered = jnp.concatenate([ret, jnp.zeros((1, d), x.dtype)])[dest]
     out_slice = jnp.einsum("tkd,tk->td", gathered.reshape(T, K, d), w)
 
     # rebuild the full token set across the model axis
     out = mpix.mpix_allgather(out_slice, "model",
-                              algorithm=opts.allgather)
+                              algorithm=opts.allgather,
+                              policy=opts.policy)
     return out.reshape(B, S, d)

@@ -42,6 +42,9 @@ class TrainOptions:
     moe_mode: str = "dropless"         # "dense" | "dropless" | "mpix_ep"
     ep_alltoall: str = "xla"
     ep_capacity: float = 1.25
+    ep_policy: str | None = None       # selection policy for EP "auto"
+                                       # collectives (None = process
+                                       # default set by the launcher)
     remat: bool = True
     use_kernel: bool = False           # Pallas attention/wkv path
     peak_lr: float = 3e-4
@@ -94,7 +97,8 @@ def make_train_step(cfg, mesh, opts: TrainOptions) -> Callable:
     if opts.moe_mode == "mpix_ep" and cfg.moe is not None:
         moe_dispatch = make_moe_dispatch(
             mesh, EPOptions(alltoall=opts.ep_alltoall,
-                            capacity_factor=opts.ep_capacity),
+                            capacity_factor=opts.ep_capacity,
+                            policy=opts.ep_policy),
             cfg.mlp_act)
     elif opts.moe_mode == "dropless" and cfg.moe is not None:
         moe_dispatch = lambda p, c, x: moe_mod.forward_dropless(

@@ -7,8 +7,8 @@ strictly weaker than hypothesis (no shrinking, no example database) but
 it keeps the whole property suite running in minimal environments.
 
 Implemented: ``given`` (keyword strategies only), ``settings``
-(max_examples, deadline ignored), ``strategies.sampled_from`` and
-``strategies.integers``.
+(max_examples, deadline ignored), ``strategies.sampled_from``,
+``strategies.integers`` and ``strategies.booleans``.
 """
 from __future__ import annotations
 
@@ -35,9 +35,14 @@ def _integers(min_value=0, max_value=1 << 31):
     return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
 
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.randrange(2)))
+
+
 class _Strategies:
     sampled_from = staticmethod(_sampled_from)
     integers = staticmethod(_integers)
+    booleans = staticmethod(_booleans)
 
 
 st = _Strategies()

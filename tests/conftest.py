@@ -1,0 +1,9 @@
+"""Shared test configuration.
+
+Schedule-invariant validation is O(nranks^2) python per round and is
+off by default (large-mesh plan builds must not pay it); the test suite
+always runs with it on so every schedule any test builds is checked.
+"""
+import os
+
+os.environ.setdefault("REPRO_VALIDATE_SCHEDULES", "1")

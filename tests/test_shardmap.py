@@ -31,6 +31,14 @@ def test_shardmap_transport_all_collectives():
 
 
 @pytest.mark.slow
+def test_unified_ir_transports_bit_exact():
+    """SimTransport == ShardMapTransport on the unified IR for every
+    registered schedule x {flat, 2-pod, 2x4 torus} x {f32, bf16}."""
+    out = run_script("check_unified_ir.py")
+    assert "ALL OK" in out
+
+
+@pytest.mark.slow
 def test_neighbor_plan_shardmap():
     out = run_script("check_neighbor_shardmap.py")
     assert "ALL OK" in out

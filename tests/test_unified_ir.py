@@ -1,0 +1,340 @@
+"""Unified-IR tests: one ``CommSchedule`` vocabulary for dense,
+neighborhood, and partitioned paths; multi-level ``Topology``; tuner
+coverage for the non-dense paths.
+
+The SimTransport-vs-ShardMapTransport bit-exactness half (every
+registered schedule x {flat, 2-pod, 2x4 torus} x {float32, bfloat16})
+runs on forced host devices in device_scripts/check_unified_ir.py via
+test_shardmap.py; here we cover everything that needs no devices.
+"""
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra not installed: seeded fallback
+    from _hypothesis_stub import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import selector, tuner
+from repro.core.algorithms import REGISTRY, partitioned
+from repro.core.plan import CommGraph, build_plan, run_sim
+from repro.core.schedule import (CommRound, CommSchedule, make_round,
+                                 validate_schedules_enabled)
+from repro.core.topology import (DCN_LINK, ICI_LINK, TopoLevel, Topology,
+                                 flat_topology, torus_topology)
+from repro.core.transport import SimTransport
+
+
+@pytest.fixture(autouse=True)
+def _isolate_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path / "cache.json"))
+    tuner.clear_cache()
+    yield
+    tuner.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# multi-level topology
+# ---------------------------------------------------------------------------
+
+
+def test_two_level_call_sites_unchanged():
+    t = Topology(8, 4)
+    assert t.fingerprint("TPU v5e") == "TPU_v5e:n8:rpp4"
+    assert flat_topology(8).fingerprint("cpu") == "cpu:n8:rpp8"
+    assert t.npods == 2 and t.pod(5) == 1 and t.local(5) == 1
+    assert t.is_local(0, 3) and not t.is_local(0, 4)
+    assert t.link(0, 3) is ICI_LINK and t.link(0, 4) is DCN_LINK
+    assert Topology.from_fingerprint(t.fingerprint("cpu")) == t
+
+
+def test_three_level_fingerprint_roundtrip():
+    t = torus_topology(2, 4, 4)      # (dcn, torus_y, torus_x)
+    fp = t.fingerprint()
+    assert fp == "model:n32:rpp16:lv[dcn-2.torus_y-4.torus_x-4]"
+    back = Topology.from_fingerprint(fp)
+    assert back == t
+    assert back.fingerprint() == fp
+    assert [lv.name for lv in back.levels] == ["dcn", "torus_y", "torus_x"]
+    assert back.levels[0].dcn and not back.levels[1].dcn
+
+
+def test_digit_suffixed_axis_names_roundtrip():
+    """Axis names ending in digits (e.g. a mesh axis "stage2") must not
+    make the fingerprint ambiguous."""
+    t = Topology.from_levels([("x1", 8), ("y", 2)])
+    back = Topology.from_fingerprint(t.fingerprint("cpu"))
+    assert back == t
+    assert [lv.name for lv in back.levels] == ["x1", "y"]
+    with pytest.raises(ValueError):   # "-" is the name/size separator
+        TopoLevel("bad-name", 2, ICI_LINK)
+
+
+def test_level_aware_link_classification():
+    t = torus_topology(2, 4, 4)
+    # same pod, same row -> innermost axis; same pod -> ICI; else DCN
+    assert t.link_level(0, 1) == 2
+    assert t.link_level(0, 4) == 1
+    assert t.link_level(0, 16) == 0
+    assert t.link(0, 16) is DCN_LINK and t.link(0, 5) is ICI_LINK
+    # coords round-trip
+    for r in range(t.nranks):
+        assert t.rank_of(t.coords(r)) == r
+    # pod helpers agree with the DCN prefix
+    assert t.pod(17) == 1 and t.local(17) == 1 and t.rank(1, 1) == 17
+
+
+def test_from_levels_validation():
+    with pytest.raises(ValueError):   # DCN inside the pod
+        Topology.from_levels([TopoLevel("ici", 4, ICI_LINK),
+                              TopoLevel("dcn", 2, DCN_LINK, dcn=True)])
+    with pytest.raises(ValueError):   # sizes don't multiply to nranks
+        Topology(nranks=8, ranks_per_pod=4,
+                 levels=(TopoLevel("ici", 3, ICI_LINK),))
+    with pytest.raises(ValueError):
+        Topology.from_fingerprint("not-a-fingerprint")
+
+
+@settings(max_examples=25, deadline=None)
+@given(npods=st.integers(1, 4), ty=st.integers(1, 4), tx=st.integers(1, 4))
+def test_torus_fingerprint_roundtrip_property(npods, ty, tx):
+    t = torus_topology(npods, ty, tx)
+    assert t.nranks == npods * ty * tx
+    assert t.ranks_per_pod == ty * tx
+    back = Topology.from_fingerprint(t.fingerprint("cpu"))
+    assert back == t
+
+
+def test_round_time_per_edge_and_self_edges():
+    t = Topology(8, 4)
+    edges = [(0, 1), (4, 5)]
+    assert t.round_time(edges, 1000) == t.round_time(edges, [1000, 1000])
+    assert t.round_time([(2, 2)], 1 << 20) == 0.0   # on-chip copy
+    # DCN edge dominates an equal-size ICI edge
+    assert t.round_time([(0, 4)], 4096) > t.round_time([(0, 1)], 4096)
+
+
+# ---------------------------------------------------------------------------
+# dense algorithms on multi-level topologies (same IR, sim oracle)
+# ---------------------------------------------------------------------------
+
+
+TORUS = torus_topology(2, 2, 2)      # 3-level, 8 ranks
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_dense_algorithms_on_torus_topology(dtype):
+    n = TORUS.nranks
+    rng = np.random.default_rng(0)
+    contrib = rng.integers(-8, 8, (n, 3)).astype(dtype)
+    buf = np.zeros((n, n, 3), dtype)
+    for r in range(n):
+        buf[r, r] = contrib[r]
+    for name, builder in REGISTRY["allgather"].items():
+        out = SimTransport(n).run(builder(TORUS), buf)
+        assert np.array_equal(
+            out, np.broadcast_to(contrib, (n, n, 3))), name
+    data = rng.integers(-8, 8, (n, n, 3)).astype(dtype)
+    for name, builder in REGISTRY["allreduce"].items():
+        out = SimTransport(n).run(builder(TORUS), data)
+        assert np.array_equal(
+            out, np.broadcast_to(data.astype(np.float64).sum(0)
+                                 .astype(dtype), (n, n, 3))), name
+
+
+def test_partitioned_schedule_matches_monolithic_shift():
+    n = 8
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=(n, 4, 3)).astype(np.float32)
+    for name, builder in REGISTRY["partitioned"].items():
+        sched = builder(flat_topology(n))
+        chunks = sched.result_slots
+        if 4 % chunks:
+            continue
+        buf = np.zeros((n, 2 * chunks, 4 // chunks, 3), np.float32)
+        buf[:, :chunks] = data.reshape(n, chunks, 4 // chunks, 3)
+        out = SimTransport(n).run(sched, buf)
+        got = out[:, chunks:].reshape(n, 4, 3)
+        want = np.roll(data, 1, axis=0)       # shift-by-one permutation
+        assert np.array_equal(got, want), name
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31), aggregate=st.booleans())
+def test_neighbor_plan_on_torus_topology(seed, aggregate):
+    """Neighbor exchanges execute through the shared SimTransport on a
+    3-level topology and match the direct per-edge gather oracle."""
+    rng = np.random.default_rng(seed)
+    n = TORUS.nranks
+    graph = CommGraph.random(n, n_local=6, degree=3, rng=rng)
+    plan = build_plan(graph, TORUS, aggregate=aggregate)
+    values = [rng.normal(size=(6, 2)) for _ in range(n)]
+    got = run_sim(plan, values)
+    for r in range(n):
+        segs = [values[s][idx] for s, idx in graph.recv_layout(r)]
+        want = (np.concatenate(segs) if segs else np.zeros((0, 2)))
+        np.testing.assert_allclose(got[r], want)
+
+
+# ---------------------------------------------------------------------------
+# schedule validation gating (REPRO_VALIDATE_SCHEDULES)
+# ---------------------------------------------------------------------------
+
+
+def _bad_round():
+    # rank 1 is not a destination but carries a live scatter row
+    return CommRound(perm=((0, 2),),
+                     gather_idx=np.zeros((3, 1), np.int32),
+                     scatter_idx=np.array([[-1], [0], [0]], np.int32))
+
+
+def test_pow2_builders_raise_not_applicable():
+    """Inapplicable builders raise the dedicated NotApplicable (so the
+    CI smoke / bit-exactness sweeps can skip *only* those), while real
+    invariant violations stay plain AssertionErrors and fail loud."""
+    from repro.core.schedule import NotApplicable
+    topo = Topology(12, 3)
+    with pytest.raises(NotApplicable):
+        REGISTRY["allgather"]["recursive_doubling"](topo)
+    with pytest.raises(NotApplicable):
+        REGISTRY["reduce_scatter"]["recursive_halving"](topo)
+    assert issubclass(NotApplicable, AssertionError)
+
+
+def test_validation_on_by_default_in_tests(monkeypatch):
+    assert validate_schedules_enabled()
+    with pytest.raises(AssertionError):
+        _bad_round()
+
+
+def test_validation_gated_off(monkeypatch):
+    monkeypatch.setenv("REPRO_VALIDATE_SCHEDULES", "0")
+    assert not validate_schedules_enabled()
+    _bad_round()    # builds without the O(n^2) checks
+
+
+# ---------------------------------------------------------------------------
+# unified accounting
+# ---------------------------------------------------------------------------
+
+
+def test_self_edges_never_count_as_messages():
+    rnd = make_round(2, [(0, 0), (1, 1)], {0: [0], 1: [0]},
+                     {0: [1], 1: [1]})
+    sched = CommSchedule(nranks=2, num_slots=2, rounds=(rnd,))
+    topo = flat_topology(2)
+    assert sched.message_count() == 0
+    assert sched.byte_count(4) == 0
+    assert sched.traffic(topo) == {"ici": 0, "dcn": 0,
+                                   "msgs_ici": 0, "msgs_dcn": 0}
+    assert sched.modeled_time(topo, 1024) == 0.0
+
+
+def test_neighbor_traffic_identical_through_unified_accounting():
+    """NeighborPlan.traffic == its schedule's generic traffic — the
+    neighbor accounting no longer has a private implementation."""
+    rng = np.random.default_rng(3)
+    topo = Topology(12, 4)
+    graph = CommGraph.random(12, n_local=5, degree=6, rng=rng)
+    for aggregate in (False, True):
+        plan = build_plan(graph, topo, aggregate=aggregate)
+        assert plan.traffic(4) == plan.schedule.traffic(topo, 4)
+
+
+# ---------------------------------------------------------------------------
+# tuner coverage for the neighbor + partitioned paths
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_persists_neighbor_and_partitioned_winners(tmp_path):
+    topo = Topology(8, 4)
+    path = tmp_path / "tuned.json"
+    table = tuner.autotune(topo, path=path, force_model=True)
+    assert tuner.NEIGHBOR in table.entries
+    assert tuner.PARTITIONED in table.entries
+    for rec in table.entries[tuner.NEIGHBOR].values():
+        assert rec["best"] in tuner.NEIGHBOR_MODES
+        assert set(rec["times"]) == set(tuner.NEIGHBOR_MODES)
+    for rec in table.entries[tuner.PARTITIONED].values():
+        assert rec["best"] in REGISTRY["partitioned"]
+    # persisted: a fresh load resolves the neighbor winner
+    tuner.clear_cache()
+    name = tuner.tuned_select(tuner.NEIGHBOR, topo, 1 << 16, path=path)
+    assert name in tuner.NEIGHBOR_MODES
+
+
+def test_select_neighbor_policy_ladder(tmp_path):
+    rng = np.random.default_rng(0)
+    topo = Topology(8, 4)
+    graph = CommGraph.random(8, n_local=8, degree=4, rng=rng,
+                             dup_frac=0.8)
+    # fixed: aggregate on multi-pod, standard on single-pod
+    assert selector.select_neighbor(graph, topo, policy="fixed") \
+        == "locality_aware"
+    assert selector.select_neighbor(graph, flat_topology(8),
+                                    policy="fixed") == "standard"
+    # model: argmin over both compiled plans
+    mode = selector.select_neighbor(graph, topo, policy="model")
+    assert mode in selector.NEIGHBOR_MODES
+    # tuned with a persisted table resolves from it
+    path = tmp_path / "tuned.json"
+    table = tuner.autotune(topo, path=path, force_model=True)
+    want = table.lookup(tuner.NEIGHBOR,
+                        graph.total_values() * 4)
+    got = selector.select_neighbor(graph, topo, policy="tuned",
+                                   tuned_table=table)
+    assert got == want
+    # tuned without any table falls back to the model choice
+    tuner.clear_cache()
+    assert selector.select_neighbor(graph, topo, policy="tuned") \
+        == selector.select_neighbor(graph, topo, policy="model")
+
+
+def test_build_plan_auto_mode_resolves_policy():
+    rng = np.random.default_rng(7)
+    topo = Topology(8, 4)
+    graph = CommGraph.random(8, n_local=8, degree=4, rng=rng,
+                             dup_frac=0.8)
+    plan = build_plan(graph, topo, aggregate=None, policy="fixed")
+    assert plan.name == "neighbor.locality_aware"
+    plan = build_plan(graph, flat_topology(8), aggregate=None,
+                      policy="fixed")
+    assert plan.name == "neighbor.standard"
+    plan = build_plan(graph, topo, aggregate=None, policy="model")
+    assert plan.name in ("neighbor.standard", "neighbor.locality_aware")
+
+
+def test_neighbor_guideline_violation_fires():
+    entries = {tuner.NEIGHBOR: {"14": {
+        "best": "standard", "nbytes": 16384,
+        "times": {"standard": 1.0, "locality_aware": 5.0}}}}
+    table = tuner.TunedTable(fingerprint="test:n8:rpp4", source="model",
+                             entries=entries)
+    out = tuner.verify_guidelines(table, Topology(8, 4))
+    assert any("locality_aware slower" in v for v in out), out
+    # and passes when the guideline holds
+    entries[tuner.NEIGHBOR]["14"]["times"]["locality_aware"] = 0.5
+    assert tuner.verify_guidelines(table, Topology(8, 4)) == []
+
+
+def test_autotune_on_three_level_topology(tmp_path):
+    table = tuner.autotune(TORUS, path=tmp_path / "t.json",
+                           force_model=True)
+    assert ":lv[dcn-2.torus_y-2.torus_x-2]" in table.fingerprint
+    assert tuner.NEIGHBOR in table.entries
+
+
+# ---------------------------------------------------------------------------
+# api input validation (asserts -> ValueErrors)
+# ---------------------------------------------------------------------------
+
+
+def test_api_shape_errors_are_value_errors():
+    from repro.core import api
+    topo = flat_topology(8)
+    x = jnp.zeros((7, 2), jnp.float32)    # 7 rows, 8 ranks
+    with pytest.raises(ValueError, match="divisible by nranks=8"):
+        api.mpix_alltoall(x, "r", algorithm="pairwise", topo=topo)
+    with pytest.raises(ValueError, match="divisible by nranks=8"):
+        api.mpix_reduce_scatter(x, "r", algorithm="ring", topo=topo)
