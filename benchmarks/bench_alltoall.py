@@ -6,15 +6,17 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.algorithms import alltoall
-from repro.core.topology import Topology
+from repro.core.algorithms import REGISTRY, alltoall
+from repro.core.topology import torus_topology
 
-TOPO = Topology(nranks=64, ranks_per_pod=32)   # schedule-built subset
+# schedule-built subset; 3-level (DCN over an 8x4 torus) so the
+# level-staged builder differentiates from the 2-level hierarchical
+TOPO = torus_topology(2, 8, 4)                 # 64 ranks
 SIZES = [2**10, 2**16, 2**20]
 
 
 def main():
-    for algo, builder in alltoall.ALGORITHMS.items():
+    for algo, builder in REGISTRY["alltoall"].items():
         sched = builder(TOPO)
         emit("alltoall", f"{algo}.rounds", sched.num_rounds)
         emit("alltoall", f"{algo}.dcn_msgs",
@@ -23,6 +25,11 @@ def main():
             t = sched.modeled_time(TOPO, nbytes)
             emit("alltoall", f"{algo}.t_model", round(t * 1e6, 2), "us",
                  f"block={nbytes}B")
+    # staged matches the hierarchical R^2 -> R DCN message reduction
+    R, Q = TOPO.ranks_per_pod, TOPO.npods
+    stg = REGISTRY["alltoall"]["staged"](TOPO)
+    assert stg.message_count(TOPO, local=False) == R * Q * (Q - 1)
+    emit("alltoall", "claims.staged_dcn_msg_reduction", 1)
     # alltoallv (ragged): aggregation cuts DCN message count R^2 -> R
     rng = np.random.default_rng(0)
     counts = rng.integers(0, 4096, (TOPO.nranks, TOPO.nranks))

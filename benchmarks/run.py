@@ -2,14 +2,19 @@
 
     PYTHONPATH=src python -m benchmarks.run
     PYTHONPATH=src python -m benchmarks.run --smoke   # schedule-build CI
+    PYTHONPATH=src python -m benchmarks.run --smoke --json smoke.json
 
 ``--smoke`` skips the device benchmarks and instead builds **every**
-registered schedule (all dense families + partitioned chunkings) and
-both neighborhood plan modes on a spread of topologies (flat, 2-pod,
-3-level torus, non-power-of-two), runs each through the SimTransport
-accounting path, and emits one CSV row per schedule — so any
-schedule-construction or accounting regression fails CI even on a
-runner with zero devices.
+registered schedule (all dense families incl. the level-staged
+builders + partitioned chunkings) and both neighborhood plan modes on
+a spread of topologies (flat, 2-pod, 3-level torus, non-power-of-two),
+runs each through the SimTransport accounting path, and emits one CSV
+row per schedule — so any schedule-construction or accounting
+regression fails CI even on a runner with zero devices.
+
+``--json PATH`` additionally writes every emitted row (modeled timings
+included) plus the wall time as a JSON document — the CI artifact the
+timing-trend jobs consume.
 """
 from __future__ import annotations
 
@@ -79,10 +84,36 @@ def smoke() -> None:
           f"{time.time() - t0:.1f}s", file=sys.stderr)
 
 
+def _write_json(path: str, mode: str, t0: float) -> None:
+    import json
+
+    from benchmarks.common import ROWS
+
+    payload = {
+        "mode": mode,
+        "elapsed_s": round(time.time() - t0, 3),
+        "rows": [dict(zip(("bench", "name", "value", "unit", "note"), row))
+                 for row in ROWS],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"# wrote {len(payload['rows'])} rows to {path}",
+          file=sys.stderr)
+
+
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            raise SystemExit("--json requires a file path")
+        json_path = argv[i + 1]
+    t0 = time.time()
     if "--smoke" in argv:
         smoke()
+        if json_path:
+            _write_json(json_path, "smoke", t0)
         return
 
     from benchmarks.common import header
@@ -102,6 +133,8 @@ def main(argv=None) -> None:
         mod.main()
     print(f"# {len(benches)} benchmarks OK in {time.time()-t0:.1f}s",
           file=sys.stderr)
+    if json_path:
+        _write_json(json_path, "full", t0)
 
 
 if __name__ == "__main__":

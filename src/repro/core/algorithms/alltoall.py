@@ -29,6 +29,66 @@ def _content(s: int, d: int, n: int) -> int:
     return s * n + d
 
 
+class OwnershipSim:
+    """Rank-by-rank content-ownership simulator emitting block-table rounds.
+
+    Tracks, per rank, a ``content-id -> slot`` map (content ``s*n+d`` is
+    the data ``s -> d``); each ``round`` moves listed contents between
+    ranks, landing receives in the slots the receiver's own sends
+    vacated — so schedules built this way are correct by construction
+    and in-place (no separate recv region).  Used by ``hierarchical``
+    (2-level) and by the multi-axis ``staged`` builder (staged.py).
+    """
+
+    def __init__(self, n: int):
+        self.n = n
+        # where[r]: content-id -> slot; start: slot d holds r -> d.
+        self.where = [{_content(r, d, n): d for d in range(n)}
+                      for r in range(n)]
+        self.rounds: list[CommRound] = []
+
+    def round(self, edges_payload) -> None:
+        """edges_payload: list of (src, dst, [content ids]).  Receiver
+        stores incoming contents into the slots its own sends vacated."""
+        n, where = self.n, self.where
+        # each rank may send and receive at most once per round: the
+        # vacated-slot reuse below hands every edge into dst the same
+        # slots (and make_round would drop duplicate rows) — a
+        # multi-in-degree round would corrupt the table silently
+        srcs = [s for s, _, _ in edges_payload]
+        dsts = [d for _, d, _ in edges_payload]
+        assert len(set(srcs)) == len(srcs), "duplicate src in round"
+        assert len(set(dsts)) == len(dsts), "duplicate dst in round"
+        edges, send, recv = [], {}, {}
+        vacated = {r: [] for r in range(n)}
+        for s, d, contents in edges_payload:
+            slots = [where[s][c] for c in contents]
+            vacated[s] += slots
+        for s, d, contents in edges_payload:
+            edges.append((s, d))
+            send[s] = [where[s][c] for c in contents]
+            tgt_slots = vacated[d][: len(contents)]
+            assert len(tgt_slots) == len(contents), (
+                "receiver must vacate as many slots as it receives")
+            recv[d] = tgt_slots
+            for c in contents:
+                del where[s][c]
+        # apply receives after all sends are resolved
+        for s, d, contents in edges_payload:
+            for c, slot in zip(contents, recv[d]):
+                where[d][c] = slot
+        self.rounds.append(make_round(n, edges, send, recv))
+
+    def post(self) -> np.ndarray:
+        """local_post table: out slot s <- current slot of content s->r."""
+        n = self.n
+        post = np.zeros((n, n), np.int32)
+        for r in range(n):
+            for s in range(n):
+                post[r, s] = self.where[r][_content(s, r, n)]
+        return post
+
+
 def pairwise(topo: Topology) -> CommSchedule:
     """N-1 rounds; round t: rank r sends r -> (r+t) data, receives from
     (r-t).  One block per message; self block never moves.
@@ -99,33 +159,7 @@ def hierarchical(topo: Topology) -> CommSchedule:
     n, R, Q = topo.nranks, topo.ranks_per_pod, topo.npods
     if Q == 1:
         return pairwise(topo)
-    # where[r] maps content-id -> slot; start: slot d holds r->d.
-    where = [{_content(r, d, n): d for d in range(n)} for r in range(n)]
-    rounds: list[CommRound] = []
-
-    def do_round(edges_payload, reduce=False):
-        """edges_payload: list of (src, dst, [content ids]).  Receiver
-        stores incoming contents into the slots its own sends vacated."""
-        edges, send, recv = [], {}, {}
-        vacated = {r: [] for r in range(n)}
-        for s, d, contents in edges_payload:
-            slots = [where[s][c] for c in contents]
-            vacated[s] += slots
-        for s, d, contents in edges_payload:
-            edges.append((s, d))
-            send[s] = [where[s][c] for c in contents]
-            tgt_slots = vacated[d][: len(contents)]
-            assert len(tgt_slots) == len(contents), (
-                "receiver must vacate as many slots as it receives")
-            recv[d] = tgt_slots
-            for c in contents:
-                del where[s][c]
-        # apply receives after all sends are resolved
-        for s, d, contents in edges_payload:
-            for c, slot in zip(contents, recv[d]):
-                where[d][c] = slot
-        rounds.append(make_round(n, edges, send, recv))
-
+    sim = OwnershipSim(n)
     # Stage 1: intra-pod pairwise, bundles of Q (one block per dest pod)
     for t in range(1, R):
         edges_payload = []
@@ -136,7 +170,7 @@ def hierarchical(topo: Topology) -> CommSchedule:
                 contents = [_content(src, topo.rank(q, (l + t) % R), n)
                             for q in range(Q)]
                 edges_payload.append((src, dst, contents))
-        do_round(edges_payload)
+        sim.round(edges_payload)
     # Stage 2: inter-pod pairwise, bundles of R (pre-sorted per dest rank)
     for u in range(1, Q):
         edges_payload = []
@@ -148,14 +182,9 @@ def hierarchical(topo: Topology) -> CommSchedule:
                 contents = [_content(topo.rank(p, ls), dst, n)
                             for ls in range(R)]
                 edges_payload.append((src, dst, contents))
-        do_round(edges_payload)
-    # local_post: out slot s <- current slot of content s->r
-    post = np.zeros((n, n), np.int32)
-    for r in range(n):
-        for s in range(n):
-            post[r, s] = where[r][_content(s, r, n)]
-    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
-                    name="alltoall.hierarchical", local_post=post)
+        sim.round(edges_payload)
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(sim.rounds),
+                    name="alltoall.hierarchical", local_post=sim.post())
 
 
 # ---------------------------------------------------------------------------

@@ -88,6 +88,25 @@ def get_default_policy() -> str:
     return _DEFAULT_POLICY
 
 
+def ensure_tuned(topo: Topology, *, path=None, heal: bool = True,
+                 set_policy: bool = True, **tune_kwargs):
+    """Init-time entry for ``policy="tuned"`` (persistent-MPI style).
+
+    Loads (tuning once if missing) the empirical table for ``topo``'s
+    substrate; with ``heal=True`` any performance-guideline violation in
+    a cached table triggers a scoped re-measure of only the offending
+    (collective, size-bucket) cells and persists a bumped generation —
+    see ``tuner.ensure_table``.  With ``set_policy=True`` the process
+    default policy flips to "tuned", so every later ``algorithm="auto"``
+    collective resolves from the (healed) table.  Returns the table.
+    """
+    from repro.core import tuner  # local: avoid import cycle
+    table = tuner.ensure_table(topo, path=path, heal=heal, **tune_kwargs)
+    if set_policy:
+        set_default_policy("tuned")
+    return table
+
+
 def _resolve(collective: str, algorithm: str, topo: Topology, nbytes: int,
              policy: str | None = None):
     if algorithm == "auto":
@@ -228,4 +247,5 @@ __all__ = [
     "mpix_allgather", "mpix_allreduce", "mpix_reduce_scatter",
     "mpix_alltoall", "mpix_neighbor_alltoallv", "make_neighbor_plan",
     "topology_from_axes", "set_default_policy", "get_default_policy",
+    "ensure_tuned",
 ]

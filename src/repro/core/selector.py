@@ -58,6 +58,13 @@ def select(collective: str, topo: Topology, nbytes: int,
                          f"expected one of {POLICIES}")
     if policy == "fixed":
         flat, hier = _FIXED[collective]
+        if len(topo.levels) >= 3 and topo.npods > 1:
+            # 3+ levels (DCN over a multi-axis torus): the 2-level
+            # hierarchical builders see only the pod/local split; the
+            # staged builders exploit every axis.  Single-pod tori stay
+            # on the flat default — with no slow level to avoid, staged
+            # store-and-forward only adds bytes.
+            return "staged"
         return hier if topo.npods > 1 else flat
     if policy == "tuned":
         from repro.core import tuner  # local: avoid import cycle

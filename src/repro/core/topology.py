@@ -73,6 +73,13 @@ class TopoLevel:
             raise ValueError(f"invalid level name {self.name!r}")
 
 
+def _inferred_level(name: str, size: int) -> TopoLevel:
+    """The level a bare ``name-size`` axis spec decodes to: the ``dcn``
+    name prefix selects the DCN class, everything else ICI."""
+    dcn = name.startswith("dcn")
+    return TopoLevel(name, size, DCN_LINK if dcn else ICI_LINK, dcn)
+
+
 def _default_levels(nranks: int, ranks_per_pod: int) -> tuple[TopoLevel, ...]:
     """Canonical hierarchy for the historical (nranks, ranks_per_pod)."""
     if ranks_per_pod == nranks:
@@ -190,38 +197,74 @@ class Topology:
         1/2-level topologies keep the historical ``kind:nN:rppR`` form;
         richer hierarchies append the per-axis geometry, e.g.
         ``model:n32:rpp16:lv[dcn-2.torus_y-4.torus_x-4]``.
+
+        Levels whose link model or DCN flag cannot be re-inferred from
+        the axis name (a custom alpha-beta model, or a dcn flag that
+        disagrees with the ``dcn`` name prefix) additionally emit a
+        ``lm[i=alpha/beta/dcn;...]`` section so the fingerprint stays a
+        loss-free geometry encoding (``from_fingerprint`` round-trips).
         """
         kind = str(device_kind).strip().replace(" ", "_").replace(":", "_")
         base = f"{kind}:n{self.nranks}:rpp{self.ranks_per_pod}"
         if self.levels == _default_levels(self.nranks, self.ranks_per_pod):
             return base
         axes = ".".join(f"{lv.name}-{lv.size}" for lv in self.levels)
-        return f"{base}:lv[{axes}]"
+        out = f"{base}:lv[{axes}]"
+        custom = []
+        for i, lv in enumerate(self.levels):
+            if lv != _inferred_level(lv.name, lv.size):
+                custom.append(f"{i}={lv.link.alpha!r}/{lv.link.beta!r}/"
+                              f"{int(lv.dcn)}")
+        if custom:
+            out += f":lm[{';'.join(custom)}]"
+        return out
 
     @classmethod
     def from_fingerprint(cls, fingerprint: str) -> "Topology":
         """Recover the geometry a ``fingerprint()`` string encodes.
 
-        Link models are restored from the level class (DCN prefix vs
-        ICI), which is all the alpha-beta model distinguishes.
+        Link models and DCN flags are restored from the level class
+        (``dcn`` name prefix vs ICI) unless the fingerprint carries an
+        explicit ``lm[...]`` override section (non-default link models).
         """
         m = re.fullmatch(
-            r"[^:]+:n(\d+):rpp(\d+)(?::lv\[([^\]]+)\])?", fingerprint)
+            r"[^:]+:n(\d+):rpp(\d+)"
+            r"(?::lv\[([^\]]+)\])?(?::lm\[([^\]]+)\])?", fingerprint)
         if not m:
             raise ValueError(f"unparseable topology fingerprint "
                              f"{fingerprint!r}")
-        n, rpp, axes = int(m.group(1)), int(m.group(2)), m.group(3)
+        n, rpp, axes, lm = (int(m.group(1)), int(m.group(2)),
+                            m.group(3), m.group(4))
         if axes is None:
+            if lm is not None:
+                raise ValueError(f"lm section without lv section in "
+                                 f"{fingerprint!r}")
             return cls(nranks=n, ranks_per_pod=rpp)
+        overrides = {}
+        for part in (lm.split(";") if lm else ()):
+            om = re.fullmatch(r"(\d+)=([^/]+)/([^/]+)/([01])", part)
+            if not om:
+                raise ValueError(f"bad link spec {part!r} in "
+                                 f"{fingerprint!r}")
+            overrides[int(om.group(1))] = (
+                LinkModel(alpha=float(om.group(2)),
+                          beta=float(om.group(3))),
+                bool(int(om.group(4))))
         levels = []
-        for part in axes.split("."):
+        for i, part in enumerate(axes.split(".")):
             am = re.fullmatch(r"([A-Za-z_][A-Za-z0-9_]*)-(\d+)", part)
             if not am:
                 raise ValueError(f"bad axis spec {part!r} in {fingerprint!r}")
             name, size = am.group(1), int(am.group(2))
-            dcn = name.startswith("dcn")
-            levels.append(TopoLevel(name, size,
-                                    DCN_LINK if dcn else ICI_LINK, dcn))
+            if i in overrides:
+                link, dcn = overrides.pop(i)
+                levels.append(TopoLevel(name, size, link, dcn))
+            else:
+                levels.append(_inferred_level(name, size))
+        if overrides:
+            raise ValueError(
+                f"lm indices {sorted(overrides)} out of range for "
+                f"{len(levels)} levels in {fingerprint!r}")
         return cls(nranks=n, ranks_per_pod=rpp, levels=tuple(levels))
 
     # -- link classification ----------------------------------------------

@@ -68,7 +68,13 @@ def default_cache_path() -> Path:
 
 
 def size_bucket(nbytes: int) -> int:
-    """log2 size bucket: bucket b covers (2**(b-1), 2**b] bytes."""
+    """log2 size bucket: bucket b covers (2**(b-1), 2**b] bytes.
+
+    Degenerate 0/1-byte payloads clamp to bucket 0; negative sizes are
+    a caller bug (a byte count can never be negative) and raise."""
+    if nbytes < 0:
+        raise ValueError(
+            f"size_bucket: payload size must be >= 0 bytes, got {nbytes}")
     return max(0, int(max(1, nbytes) - 1).bit_length())
 
 
@@ -91,12 +97,17 @@ class TunedTable:
 
     entries[collective][str(bucket)] = {
         "best": name, "nbytes": probed_size, "times": {name: seconds}}
+
+    ``generation`` counts heal passes: every scoped re-measurement of
+    guideline-violating cells (``retune_cells``) bumps it, so consumers
+    can tell a freshly tuned table (0) from one that has been repaired.
     """
 
     fingerprint: str
     source: str                       # "measured" | "model"
     entries: dict
     violations: list = dataclasses.field(default_factory=list)
+    generation: int = 0
 
     def lookup(self, collective: str, nbytes: int) -> str | None:
         """Winner for the bucket nearest to ``nbytes`` (None if absent)."""
@@ -118,13 +129,15 @@ class TunedTable:
 
     def to_dict(self) -> dict:
         return {"fingerprint": self.fingerprint, "source": self.source,
-                "entries": self.entries, "violations": self.violations}
+                "entries": self.entries, "violations": self.violations,
+                "generation": self.generation}
 
     @classmethod
     def from_dict(cls, d: dict) -> "TunedTable":
         return cls(fingerprint=d["fingerprint"], source=d["source"],
                    entries=d["entries"],
-                   violations=list(d.get("violations", [])))
+                   violations=list(d.get("violations", [])),
+                   generation=int(d.get("generation", 0)))
 
 
 def save_table(table: TunedTable, path: str | Path | None = None) -> Path:
@@ -223,6 +236,39 @@ def _modeled(sched, topo: Topology, nbytes: int) -> float:
     return sched.modeled_time(topo, block)
 
 
+def _candidates(collective: str, topo: Topology) -> dict:
+    """Buildable schedules for one collective on this topology."""
+    from repro.core.algorithms import REGISTRY
+
+    out = {}
+    for name, builder in REGISTRY[collective].items():
+        try:
+            out[name] = builder(topo)
+        except NotApplicable:            # e.g. power-of-2-only variants
+            continue
+    return out
+
+
+def _time_cell(collective: str, candidates: dict, topo: Topology,
+               nbytes: int, *, measured: bool, repeats: int,
+               include_xla: bool) -> dict:
+    """Time every candidate for one (collective, size) cell."""
+    times: dict = {}
+    for name, sched in candidates.items():
+        if measured:
+            times[name] = _measure(collective, name, topo, int(nbytes),
+                                   repeats)
+        else:
+            times[name] = _modeled(sched, topo, int(nbytes))
+    if measured and include_xla:
+        # the substrate's own lowering — MPI Advance's "system MPI"
+        times["xla"] = _measure(collective, "xla", topo, int(nbytes),
+                                repeats)
+    assert times, (collective, nbytes)
+    return {"best": min(times, key=times.get), "nbytes": int(nbytes),
+            "times": {k: float(v) for k, v in times.items()}}
+
+
 # ---------------------------------------------------------------------------
 # generic CommSchedule timing (any path: dense, neighbor, partitioned)
 # ---------------------------------------------------------------------------
@@ -281,36 +327,15 @@ def tune(topo: Topology, *, collectives=COLLECTIVES, sizes=DEFAULT_SIZES,
     model (and records ``source="model"`` so the fingerprint can never
     collide with a measured table).
     """
-    from repro.core.algorithms import REGISTRY
-
     measured = (not force_model) and jax.device_count() >= topo.nranks
     entries: dict = {}
     for coll in collectives:
-        candidates = {}
-        for name, builder in REGISTRY[coll].items():
-            try:
-                candidates[name] = builder(topo)
-            except NotApplicable:        # e.g. power-of-2-only variants
-                continue
+        candidates = _candidates(coll, topo)
         per: dict = {}
         for nbytes in sizes:
-            times: dict = {}
-            for name, sched in candidates.items():
-                if measured:
-                    times[name] = _measure(coll, name, topo, int(nbytes),
-                                           repeats)
-                else:
-                    times[name] = _modeled(sched, topo, int(nbytes))
-            if measured and include_xla:
-                # the substrate's own lowering — MPI Advance's "system MPI"
-                times["xla"] = _measure(coll, "xla", topo, int(nbytes),
-                                        repeats)
-            assert times, (coll, nbytes)
-            per[str(size_bucket(int(nbytes)))] = {
-                "best": min(times, key=times.get),
-                "nbytes": int(nbytes),
-                "times": {k: float(v) for k, v in times.items()},
-            }
+            per[str(size_bucket(int(nbytes)))] = _time_cell(
+                coll, candidates, topo, int(nbytes), measured=measured,
+                repeats=repeats, include_xla=include_xla)
         entries[coll] = per
     table = TunedTable(
         fingerprint=substrate_fingerprint(topo, force_model=force_model),
@@ -350,7 +375,9 @@ def tune_neighbor(topo: Topology, *, sizes=DEFAULT_SIZES, repeats: int = 3,
              for mode in NEIGHBOR_MODES}
     per: dict = {}
     for nbytes in sizes:
-        slot_nbytes = _ELEM * max(1, int(nbytes) // (total_rows * _ELEM))
+        # max(1, ...) guards degenerate exchanges (a 1-rank topology's
+        # random graph has no edges -> zero value rows)
+        slot_nbytes = _ELEM * max(1, int(nbytes) // max(1, total_rows * _ELEM))
         times = {
             mode: schedule_time(plan.schedule, topo,
                                 slot_nbytes=slot_nbytes, repeats=repeats,
@@ -420,19 +447,12 @@ def autotune(topo: Topology, *, path: str | Path | None = None,
 # ---------------------------------------------------------------------------
 
 
-def verify_guidelines(table: TunedTable, topo: Topology | None = None,
-                      *, tol: float = 1.10) -> list:
-    """Return human-readable violations of classic performance guidelines.
+def _guideline_findings(table: TunedTable, topo: Topology | None = None,
+                        *, tol: float = 1.10) -> list:
+    """Guideline check core: list of (message, offending-cells) pairs.
 
-    Checked (each with ``tol`` relative slack):
-      * composition:   allreduce(s) <= reduce_scatter(s) + allgather(s)
-      * monotonicity:  per algorithm, time never decreases with size
-      * specialized <= generic: on multi-pod topologies the
-        locality-aware ``hierarchical`` variant should not lose to the
-        flat default for the largest probed bucket
-      * neighbor aggregation: on multi-pod topologies the
-        locality-aware plan should not lose to the standard plan for
-        the largest probed bucket (aggregate <= standard)
+    A cell is a ``(collective, bucket)`` key into ``table.entries`` —
+    the unit the auto-retune loop re-measures (``retune_cells``).
     """
     out: list = []
     e = table.entries
@@ -449,10 +469,12 @@ def verify_guidelines(table: TunedTable, topo: Topology | None = None,
         ar, rs, ag = (best("allreduce", b), best("reduce_scatter", b),
                       best("allgather", b))
         if ar is not None and ar > tol * (rs + ag):
-            out.append(
+            out.append((
                 f"allreduce>rs+ag @bucket {b}: {ar:.3e} > "
                 f"{rs:.3e}+{ag:.3e} (guideline: composed implementation "
-                f"bounds the specialized one)")
+                f"bounds the specialized one)",
+                (("allreduce", b), ("reduce_scatter", b),
+                 ("allgather", b))))
 
     # monotonicity in message size, per (collective, algorithm)
     for coll, per in e.items():
@@ -461,26 +483,34 @@ def verify_guidelines(table: TunedTable, topo: Topology | None = None,
             for name, t_lo in per[lo]["times"].items():
                 t_hi = per[hi]["times"].get(name)
                 if t_hi is not None and t_lo > tol * t_hi:
-                    out.append(
+                    out.append((
                         f"{coll}.{name} non-monotone: bucket {lo} "
-                        f"({t_lo:.3e}s) > bucket {hi} ({t_hi:.3e}s)")
+                        f"({t_lo:.3e}s) > bucket {hi} ({t_hi:.3e}s)",
+                        ((coll, lo), (coll, hi))))
 
-    # specialized <= generic on multi-pod substrates (largest bucket)
+    # specialized <= generic on multi-pod substrates (largest bucket):
+    # the 2-level hierarchical variant on any multi-pod topology, and
+    # the fully level-aware staged variant on 3+-level hierarchies.
     if topo is not None and topo.npods > 1:
         from repro.core.selector import _FIXED
+        specialized = ["hierarchical"]
+        if len(topo.levels) >= 3:
+            specialized.append("staged")
         for coll, per in e.items():
             if not per or coll not in _FIXED:
                 continue
             b = max(per, key=int)
             times = per[b]["times"]
             flat_default = _FIXED[coll][0]
-            if ("hierarchical" in times and flat_default in times
-                    and times["hierarchical"] > tol * times[flat_default]):
-                out.append(
-                    f"{coll}.hierarchical slower than flat "
-                    f"{flat_default} @bucket {b} on multi-pod topo "
-                    f"({times['hierarchical']:.3e} > "
-                    f"{times[flat_default]:.3e})")
+            for name in specialized:
+                if (name in times and flat_default in times
+                        and times[name] > tol * times[flat_default]):
+                    out.append((
+                        f"{coll}.{name} slower than flat "
+                        f"{flat_default} @bucket {b} on multi-pod topo "
+                        f"({times[name]:.3e} > "
+                        f"{times[flat_default]:.3e})",
+                        ((coll, b),)))
 
     # neighbor: aggregate <= standard on multi-pod (largest bucket)
     if topo is not None and topo.npods > 1 and e.get(NEIGHBOR):
@@ -489,12 +519,44 @@ def verify_guidelines(table: TunedTable, topo: Topology | None = None,
         times = per[b]["times"]
         if ("locality_aware" in times and "standard" in times
                 and times["locality_aware"] > tol * times["standard"]):
-            out.append(
+            out.append((
                 f"{NEIGHBOR}.locality_aware slower than standard "
                 f"@bucket {b} on multi-pod topo "
                 f"({times['locality_aware']:.3e} > "
-                f"{times['standard']:.3e})")
+                f"{times['standard']:.3e})",
+                ((NEIGHBOR, b),)))
     return out
+
+
+def verify_guidelines(table: TunedTable, topo: Topology | None = None,
+                      *, tol: float = 1.10) -> list:
+    """Return human-readable violations of classic performance guidelines.
+
+    Checked (each with ``tol`` relative slack):
+      * composition:   allreduce(s) <= reduce_scatter(s) + allgather(s)
+      * monotonicity:  per algorithm, time never decreases with size
+      * specialized <= generic: on multi-pod topologies the
+        locality-aware ``hierarchical`` variant (and, on 3+-level
+        hierarchies, the ``staged`` variant) should not lose to the
+        flat default for the largest probed bucket
+      * neighbor aggregation: on multi-pod topologies the
+        locality-aware plan should not lose to the standard plan for
+        the largest probed bucket (aggregate <= standard)
+    """
+    return [msg for msg, _ in _guideline_findings(table, topo, tol=tol)]
+
+
+def violation_cells(table: TunedTable, topo: Topology | None = None,
+                    *, tol: float = 1.10) -> list:
+    """Unique (collective, bucket) cells implicated in any guideline
+    violation, in finding order — the auto-retune work list."""
+    cells, seen = [], set()
+    for _, cs in _guideline_findings(table, topo, tol=tol):
+        for cell in cs:
+            if cell not in seen:
+                seen.add(cell)
+                cells.append(cell)
+    return cells
 
 
 # ---------------------------------------------------------------------------
@@ -533,13 +595,163 @@ def tuned_select(collective: str, topo: Topology, nbytes: int,
     return name
 
 
-def ensure_table(topo: Topology, *, path: str | Path | None = None,
-                 **tune_kwargs) -> TunedTable:
-    """Load the table for the current substrate, tuning once if missing."""
-    table = load_table(substrate_fingerprint(topo), path=path)
-    if table is None:
-        table = tune(topo, **tune_kwargs)
+def stale_cells(table: TunedTable, topo: Topology) -> list:
+    """Cells missing a currently-registered candidate: the table was
+    tuned before that algorithm landed (or before a neighbor mode /
+    partition count was added), so its winners never saw the newcomer.
+    These join the heal work list alongside guideline violations.
+
+    Cost discipline: the registry name diff runs first, and only names
+    absent from a cell are test-built — a name that raises
+    ``NotApplicable`` on this topology (pow2-only variants on odd rank
+    counts) is permanently inapplicable, not stale.  A healthy table
+    never constructs a full candidate set here."""
+    from repro.core.algorithms import REGISTRY
+
+    out = []
+    for coll, per in table.entries.items():
+        if coll in COLLECTIVES:
+            registered = set(REGISTRY[coll])
+            buildable: dict = {}          # name -> builds on this topo?
+            for bucket, rec in per.items():
+                stale = False
+                for name in registered - set(rec["times"]):
+                    if name not in buildable:
+                        try:
+                            REGISTRY[coll][name](topo)
+                            buildable[name] = True
+                        except NotApplicable:
+                            buildable[name] = False
+                    stale = stale or buildable[name]
+                if stale:
+                    out.append((coll, bucket))
+            continue
+        if coll == NEIGHBOR:
+            want = set(NEIGHBOR_MODES)
+        elif coll == PARTITIONED:
+            want = set(REGISTRY[PARTITIONED])
+        else:
+            continue
+        for bucket, rec in per.items():
+            if want - set(rec["times"]):
+                out.append((coll, bucket))
+    return out
+
+
+def _cell_differs(fresh: dict, rec: dict, tol: float) -> bool:
+    """Selection-meaningful difference between two timings of one cell:
+    a different winner, a different candidate set, or any timing moved
+    by more than the guideline slack ``tol`` (so measurement noise on a
+    live substrate does not count a re-confirmed cell as changed)."""
+    if fresh["best"] != rec["best"]:
+        return True
+    if set(fresh["times"]) != set(rec["times"]):
+        return True
+    for name, t in fresh["times"].items():
+        old = rec["times"][name]
+        if t > old * tol or old > t * tol:
+            return True
+    return False
+
+
+def retune_cells(table: TunedTable, topo: Topology, cells,
+                 *, repeats: int = 3, force_model: bool = False,
+                 include_xla: bool = True, tol: float = 1.10) -> list:
+    """Scoped auto-retune: re-measure ONLY the given (collective,
+    bucket) cells of ``table`` in place, at each cell's recorded probe
+    size; untouched cells keep their timings.  Re-verifies the
+    guidelines and returns the cells whose entries meaningfully changed
+    (see ``_cell_differs``); ``generation`` is bumped iff any did — so
+    a violation the substrate genuinely exhibits, re-confirmed within
+    noise on every heal, is recorded as a finding without inflating the
+    generation or churning the persisted file.
+
+    This is the Hunold loop's repair step: a guideline violation is a
+    finding about *specific* table cells (stale after a driver update,
+    a noisy measurement, a topology drift), so healing re-measures those
+    cells instead of throwing away the whole table.
+    """
+    measured = (not force_model) and jax.device_count() >= topo.nranks
+    dense_candidates: dict = {}       # full sets, built once per coll
+    retuned: list = []
+    for coll, bucket in cells:
+        rec = table.entries.get(coll, {}).get(bucket)
+        if rec is None:
+            continue
+        nbytes = int(rec["nbytes"])
+        if coll in COLLECTIVES:
+            if coll not in dense_candidates:
+                dense_candidates[coll] = _candidates(coll, topo)
+            fresh = _time_cell(coll, dense_candidates[coll], topo, nbytes,
+                               measured=measured, repeats=repeats,
+                               include_xla=include_xla)
+        elif coll == NEIGHBOR:
+            fresh = next(iter(tune_neighbor(
+                topo, sizes=(nbytes,), repeats=repeats,
+                force_model=force_model).values()))
+        elif coll == PARTITIONED:
+            fresh = next(iter(tune_partitioned(
+                topo, sizes=(nbytes,), repeats=repeats,
+                force_model=force_model).values()))
+        else:
+            continue
+        if _cell_differs(fresh, rec, tol):
+            table.entries[coll][bucket] = fresh
+            retuned.append((coll, bucket))
+    if retuned:
+        table.generation += 1
+    table.violations = verify_guidelines(table, topo, tol=tol)
+    return retuned
+
+
+def heal_table(table: TunedTable, topo: Topology, *,
+               path: str | Path | None = None, repeats: int = 3,
+               force_model: bool = False, include_xla: bool = True,
+               tol: float = 1.10) -> list:
+    """Verify-and-repair one loaded table: re-measure only the
+    guideline-violating cells plus any cells missing a currently
+    registered candidate (``stale_cells`` — tables tuned before a new
+    algorithm landed), persisting iff something meaningfully changed.
+    Returns the changed cells.  Shared by ``ensure_table`` and the
+    launchers' ``--autotune`` reuse path."""
+    cells = violation_cells(table, topo, tol=tol)
+    seen = set(cells)
+    cells += [c for c in stale_cells(table, topo) if c not in seen]
+    if not cells:
+        return []
+    changed = retune_cells(table, topo, cells, repeats=repeats,
+                           force_model=force_model,
+                           include_xla=include_xla, tol=tol)
+    if changed:
         save_table(table, path=path)
+    return changed
+
+
+def ensure_table(topo: Topology, *, path: str | Path | None = None,
+                 heal: bool = True, collectives=COLLECTIVES,
+                 sizes=DEFAULT_SIZES, repeats: int = 3,
+                 include_xla: bool = True, force_model: bool = False,
+                 tol: float = 1.10) -> TunedTable:
+    """Load the table for the current substrate, tuning once if missing.
+
+    With ``heal=True`` (default) a loaded table is re-verified against
+    the performance guidelines (plus candidate coverage); any violation
+    triggers ``retune_cells`` on only the offending (collective,
+    size-bucket) cells — never a full re-tune — and the healed table is
+    persisted with a bumped ``generation``.
+    """
+    fp = substrate_fingerprint(topo, force_model=force_model)
+    table = load_table(fp, path=path)
+    if table is None:
+        table = tune(topo, collectives=collectives, sizes=sizes,
+                     repeats=repeats, include_xla=include_xla,
+                     force_model=force_model, tol=tol)
+        save_table(table, path=path)
+        return table
+    if heal:
+        heal_table(table, topo, path=path, repeats=repeats,
+                   force_model=force_model, include_xla=include_xla,
+                   tol=tol)
     return table
 
 
@@ -579,7 +791,8 @@ def main(argv=None):
         table = autotune(topo, path=args.out, sizes=sizes,
                          repeats=args.repeats, force_model=args.model)
         path = default_cache_path() if args.out is None else Path(args.out)
-    print(f"fingerprint {table.fingerprint} ({table.source}) -> {path}")
+    print(f"fingerprint {table.fingerprint} ({table.source}, "
+          f"generation {table.generation}) -> {path}")
     for coll, per in table.entries.items():
         for b in sorted(per, key=int):
             rec = per[b]

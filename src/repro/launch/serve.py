@@ -34,9 +34,13 @@ def main(argv=None):
                          "'auto' collectives (tuned reads the persisted "
                          "tuner table; see repro.core.tuner)")
     ap.add_argument("--autotune", action="store_true",
-                    help="run tuner.autotune for this mesh before "
-                         "serving (persists winners for "
-                         "--select-policy tuned)")
+                    help="tune this mesh before serving (persists "
+                         "winners for --select-policy tuned); an "
+                         "existing table is healed in place — only "
+                         "guideline-violating cells are re-measured")
+    ap.add_argument("--autotune-full", action="store_true",
+                    help="ignore any persisted table and re-measure "
+                         "everything from scratch (implies --autotune)")
     args = ap.parse_args(argv)
 
     mpix_api.set_default_policy(args.select_policy)
@@ -47,9 +51,9 @@ def main(argv=None):
         mesh = compat.make_mesh((n, 1), ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
-    if args.autotune:
+    if args.autotune or args.autotune_full:
         from repro.launch.train import autotune_mesh
-        autotune_mesh(mesh)
+        autotune_mesh(mesh, full=args.autotune_full)
 
     max_len = args.prompt_len + args.gen
     with compat.set_mesh(mesh):

@@ -74,17 +74,33 @@ def mesh_topologies(mesh):
     return list(topos.values())
 
 
-def autotune_mesh(mesh, repeats: int = 3):
-    """Run ``tuner.autotune`` for every topology this mesh's collectives
-    query at trace time: measures every path (dense collectives,
-    neighbor aggregate-vs-standard, partitioned chunking) and persists
-    winners so ``--select-policy tuned`` resolves from measured data."""
+def autotune_mesh(mesh, repeats: int = 3, full: bool = False):
+    """Tune (or heal) every topology this mesh's collectives query at
+    trace time.
+
+    A topology with no persisted table gets a full ``tuner.autotune``
+    (measures every path — dense collectives, neighbor aggregate-vs-
+    standard, partitioned chunking — and persists winners).  A topology
+    that already has a table is *healed* instead (``tuner.heal_table``):
+    guideline violations and cells missing newly registered algorithms
+    trigger a scoped re-measure of only those cells and bump the table
+    generation — untouched cells keep their timings.  ``full=True``
+    forces a from-scratch re-tune of everything.
+    """
     from repro.core import tuner
     tables = []
     for topo in mesh_topologies(mesh):
-        table = tuner.autotune(topo, repeats=repeats)
-        print(f"autotuned {table.fingerprint} ({table.source}): "
-              f"{sorted(table.entries)}")
+        table = (None if full else
+                 tuner.load_table(tuner.substrate_fingerprint(topo)))
+        if table is None:
+            table = tuner.autotune(topo, repeats=repeats)
+            print(f"autotuned {table.fingerprint} ({table.source}): "
+                  f"{sorted(table.entries)}")
+        else:
+            healed = tuner.heal_table(table, topo, repeats=repeats)
+            print(f"reused {table.fingerprint} ({table.source}, "
+                  f"generation {table.generation}): "
+                  f"{len(healed)} cell(s) repaired")
         for v in table.violations:
             print(f"  guideline violation: {v}")
         tables.append(table)
@@ -110,9 +126,14 @@ def main(argv=None):
                          "'auto' collectives (tuned reads the persisted "
                          "tuner table; see repro.core.tuner)")
     ap.add_argument("--autotune", action="store_true",
-                    help="run tuner.autotune for this mesh before "
-                         "training (persists dense + neighbor + "
-                         "partitioned winners for --select-policy tuned)")
+                    help="tune this mesh before training (persists dense "
+                         "+ neighbor + partitioned winners for "
+                         "--select-policy tuned); an existing table is "
+                         "healed in place — only guideline-violating "
+                         "cells are re-measured")
+    ap.add_argument("--autotune-full", action="store_true",
+                    help="ignore any persisted table and re-measure "
+                         "everything from scratch (implies --autotune)")
     ap.add_argument("--grad-buckets", type=int, default=1)
     ap.add_argument("--moe-mode", default="dropless")
     ap.add_argument("--ep-alltoall", default="xla")
@@ -123,8 +144,8 @@ def main(argv=None):
 
     mpix_api.set_default_policy(args.select_policy)
     cfg, mesh, opts = build(args)
-    if args.autotune:
-        autotune_mesh(mesh)
+    if args.autotune or args.autotune_full:
+        autotune_mesh(mesh, full=args.autotune_full)
     pipe = DataPipeline(PipelineConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.batch))

@@ -26,11 +26,12 @@ MESHES = {
 
 ALGOS = {
     "allgather": ["xla", "ring", "bruck", "recursive_doubling",
-                  "hierarchical"],
+                  "hierarchical", "staged"],
     "allreduce": ["xla", "ring_rs_ag", "recursive_halving_doubling",
-                  "hierarchical"],
-    "reduce_scatter": ["xla", "ring", "recursive_halving", "hierarchical"],
-    "alltoall": ["xla", "pairwise", "bruck", "hierarchical"],
+                  "hierarchical", "staged"],
+    "reduce_scatter": ["xla", "ring", "recursive_halving", "hierarchical",
+                       "staged"],
+    "alltoall": ["xla", "pairwise", "bruck", "hierarchical", "staged"],
 }
 
 rng = np.random.default_rng(0)

@@ -1,8 +1,9 @@
 """Subprocess check: SimTransport and ShardMapTransport are bit-exact on
-the unified IR — every registered schedule (dense families + partitioned
-chunked shifts) and both neighborhood plan modes, executed on the same
-random buffer by both backends, for every topology in {flat, 2-pod,
-2x4 torus} x dtype in {float32, bfloat16}.
+the unified IR — every registered schedule (dense families incl. the
+staged builders + partitioned chunked shifts) and both neighborhood
+plan modes, executed on the same random buffer by both backends, for
+every topology in {flat, 2-pod, 2x4 torus, 3-level 2x(2x2)} x dtype in
+{float32, bfloat16}.
 
 This is the executor-equivalence half of the unification contract: one
 IR, two backends, zero semantic drift.  (Semantic correctness of each
@@ -31,6 +32,9 @@ CASES = {
     "flat":  (flat_topology(N), (N,), ("r",)),
     "pods":  (Topology(N, 4), (2, 4), ("pod", "data")),
     "torus": (torus_topology(1, 2, 4), (2, 4), ("y", "x")),
+    # 3-level: DCN over a 2x2 torus (the staged builders' home turf;
+    # the full 2x(4x2) sweep runs in check_hierarchical.py)
+    "3lvl":  (torus_topology(2, 2, 2), (2, 2, 2), ("pod", "y", "x")),
 }
 DTYPES = {"float32": np.float32, "bfloat16": jnp.bfloat16}
 

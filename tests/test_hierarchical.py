@@ -1,0 +1,340 @@
+"""Cross-level conformance suite for the hierarchy-staged builders.
+
+Proves the staged (3+-level) algorithm builders correct and profitable:
+
+  * every registered dense schedule — including the ``staged`` family —
+    is bit-exact against its flat reference on a 3-level topology
+    (2 pods x 4x2 torus) via SimTransport; the ShardMapTransport half
+    runs on forced host devices in device_scripts/check_hierarchical.py
+    (plus the 3-level case added to check_unified_ir.py);
+  * property tests over random level stacks (1-4 levels) check the
+    staged decomposition engine on arbitrary geometries;
+  * on the canonical 2-level hierarchy the staged allreduce /
+    reduce-scatter reproduce the ``hierarchical`` builders
+    round-for-round (the engine generalizes, not forks, them);
+  * staged allreduce/alltoall beat their flat counterparts in modeled
+    time on the 3-level torus, and their DCN traffic meets the same
+    minimality bounds as the 2-level locality-aware algorithms;
+  * ``Topology.from_fingerprint`` round-trips random level stacks with
+    non-default link models.
+"""
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra not installed: seeded fallback
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import selector, tuner
+from repro.core.algorithms import REGISTRY, allreduce, reduce_scatter, staged
+from repro.core.schedule import NotApplicable
+from repro.core.topology import (DCN_LINK, ICI_LINK, LinkModel, TopoLevel,
+                                 Topology, flat_topology, torus_topology)
+from repro.core.transport import SimTransport
+
+from test_shardmap import run_script
+
+TOPO3 = torus_topology(2, 4, 2)     # 2 pods x (4x2 torus) = 16 ranks
+FLAT = {"allgather": "ring", "allreduce": "ring_rs_ag",
+        "reduce_scatter": "ring", "alltoall": "pairwise"}
+
+
+def _int_data(n, rng, lo=-8, hi=8):
+    """Integer-valued floats: sums of <= n of these are exact in f32 for
+    any association order, so reduce outputs are bit-comparable across
+    algorithms with different reduction trees."""
+    return rng.integers(lo, hi, (n, n, 3)).astype(np.float32)
+
+
+def _run(topo, coll, name, buf):
+    sched = REGISTRY[coll][name](topo)
+    if sched.num_slots > buf.shape[1]:  # separate recv region (pairwise)
+        pad = np.zeros((buf.shape[0], sched.num_slots - buf.shape[1])
+                       + buf.shape[2:], buf.dtype)
+        buf = np.concatenate([buf, pad], axis=1)
+    out = SimTransport(topo.nranks).run(sched, buf)
+    return out[:, : sched.result_slots]
+
+
+def _oracle_io(coll, topo, rng):
+    """(input buffer, expected output) for one dense collective."""
+    n = topo.nranks
+    data = _int_data(n, rng)
+    if coll == "allgather":
+        contrib = data[:, 0]
+        buf = np.zeros((n, n, 3), np.float32)
+        for r in range(n):
+            buf[r, r] = contrib[r]
+        return buf, np.broadcast_to(contrib, (n, n, 3))
+    if coll == "allreduce":
+        return data, np.broadcast_to(data.sum(0), (n, n, 3))
+    if coll == "reduce_scatter":
+        return data, data.sum(0)       # compared at [r, r] only
+    if coll == "alltoall":
+        return data, np.swapaxes(data, 0, 1)
+    raise AssertionError(coll)
+
+
+# ---------------------------------------------------------------------------
+# the staged decomposition engine
+# ---------------------------------------------------------------------------
+
+
+def test_level_groups_partition_ranks():
+    for lvl in range(len(TOPO3.levels)):
+        groups = staged.level_groups(TOPO3, lvl)
+        flat = sorted(r for g in groups for r in g)
+        assert flat == list(range(TOPO3.nranks))
+        for g in groups:
+            assert len(g) == TOPO3.levels[lvl].size
+            # members differ only in the level-lvl coordinate, in order
+            coords = [TOPO3.coords(r) for r in g]
+            assert [c[lvl] for c in coords] == list(range(len(g)))
+            for c in coords:
+                assert c[:lvl] == coords[0][:lvl]
+                assert c[lvl + 1:] == coords[0][lvl + 1:]
+
+
+def test_owned_blocks_formula():
+    # fixing every level (lvl=0) collapses to the rank's own block;
+    # an empty tail (lvl=len(levels)) matches every block
+    k = len(TOPO3.levels)               # (dcn-2, torus_y-4, torus_x-2)
+    for r in range(TOPO3.nranks):
+        assert staged._owned_blocks(TOPO3, r, 0) == [r]
+        assert staged._owned_blocks(TOPO3, r, k) == list(range(TOPO3.nranks))
+    # rank 0 = coords (0, 0, 0): innermost-stage set fixes only the x
+    # coordinate; the next stage up additionally fixes y
+    assert staged._owned_blocks(TOPO3, 0, 2) == [0, 2, 4, 6, 8, 10, 12, 14]
+    assert staged._owned_blocks(TOPO3, 0, 1) == [0, 8]
+
+
+@pytest.mark.parametrize("coll", sorted(FLAT))
+def test_every_registered_schedule_matches_flat_reference_on_3level(coll):
+    """Acceptance: on 2 pods x 4x2 every registered algorithm — staged
+    included — is bit-exact vs the flat reference (and the oracle)."""
+    rng = np.random.default_rng(0)
+    buf, want = _oracle_io(coll, TOPO3, rng)
+    ref = _run(TOPO3, coll, FLAT[coll], buf)
+    for name, builder in REGISTRY[coll].items():
+        try:
+            builder(TOPO3)
+        except NotApplicable:
+            continue
+        got = _run(TOPO3, coll, name, buf)
+        if coll == "reduce_scatter":
+            for r in range(TOPO3.nranks):
+                assert np.array_equal(got[r, r], want[r]), (name, r)
+                assert np.array_equal(got[r, r], ref[r, r]), (name, r)
+        else:
+            assert np.array_equal(got, want), name
+            assert np.array_equal(got, ref), name
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_staged_builders_on_random_level_stacks(seed):
+    """The axis-decomposition engine is geometry-agnostic: correct on
+    random 1-4 level stacks (degenerate axes of size 1 included)."""
+    rng = np.random.default_rng(seed)
+    naxes = int(rng.integers(1, 4))
+    sizes = [int(rng.integers(1, 4)) for _ in range(naxes)]
+    topo = torus_topology(int(rng.integers(1, 4)), *sizes)
+    n = topo.nranks
+    if n == 1:
+        return
+    for coll in sorted(FLAT):
+        buf, want = _oracle_io(coll, topo, rng)
+        got = _run(topo, coll, "staged", buf)
+        if coll == "reduce_scatter":
+            for r in range(n):
+                assert np.array_equal(got[r, r], want[r]), (coll, r, topo)
+        else:
+            assert np.array_equal(got, want), (coll, topo)
+
+
+@pytest.mark.parametrize("pair", [
+    (staged.allreduce_staged, allreduce.hierarchical),
+    (staged.reduce_scatter_staged, reduce_scatter.hierarchical),
+])
+def test_staged_reproduces_hierarchical_on_two_levels(pair):
+    """On the canonical DCN-over-ICI split the staged engine emits the
+    2-level hierarchical schedules round-for-round."""
+    build_staged, build_hier = pair
+    topo = Topology(8, 4)
+    a, b = build_staged(topo), build_hier(topo)
+    assert len(a.rounds) == len(b.rounds)
+    for ra, rb in zip(a.rounds, b.rounds):
+        assert ra.perm == rb.perm
+        assert np.array_equal(ra.gather_idx, rb.gather_idx)
+        assert np.array_equal(ra.scatter_idx, rb.scatter_idx)
+        assert ra.reduce == rb.reduce
+
+
+def test_staged_degenerates_to_flat_on_one_level():
+    topo = flat_topology(6)
+    rng = np.random.default_rng(1)
+    for coll in sorted(FLAT):
+        buf, want = _oracle_io(coll, topo, rng)
+        got = _run(topo, coll, "staged", buf)
+        ref = _run(topo, coll, FLAT[coll], buf)
+        if coll == "reduce_scatter":
+            for r in range(6):
+                assert np.array_equal(got[r, r], ref[r, r])
+        else:
+            assert np.array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# profitability: modeled time + per-link-class traffic (acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nbytes", [1 << 10, 1 << 16, 1 << 22])
+def test_staged_beats_flat_in_modeled_time_on_3level(nbytes):
+    """Acceptance: staged allreduce/alltoall beat their flat
+    counterparts in modeled time on 2 pods x 4x2 (all probed sizes)."""
+    n = TOPO3.nranks
+    for coll in ("allreduce", "alltoall"):
+        block = max(1, nbytes // n)
+        t_staged = REGISTRY[coll]["staged"](TOPO3).modeled_time(TOPO3, block)
+        t_flat = REGISTRY[coll][FLAT[coll]](TOPO3).modeled_time(TOPO3, block)
+        assert t_staged < t_flat, (coll, nbytes, t_staged, t_flat)
+    for coll in ("allgather", "reduce_scatter"):
+        block = max(1, nbytes // n)
+        t_staged = REGISTRY[coll]["staged"](TOPO3).modeled_time(TOPO3, block)
+        t_flat = REGISTRY[coll][FLAT[coll]](TOPO3).modeled_time(TOPO3, block)
+        assert t_staged <= t_flat, (coll, nbytes, t_staged, t_flat)
+
+
+def test_staged_dcn_traffic_minimal():
+    """Staged schedules meet the 2-level locality-aware DCN bounds on a
+    3-level torus: each block crosses the DCN once per remote pod, and
+    alltoall DCN messages drop from R^2 to R per pod-pair."""
+    n, R, Q = TOPO3.nranks, TOPO3.ranks_per_pod, TOPO3.npods
+    ag = REGISTRY["allgather"]["staged"](TOPO3)
+    assert ag.byte_count(1, TOPO3, local=False) == n * (Q - 1)
+    rs = REGISTRY["reduce_scatter"]["staged"](TOPO3)
+    assert rs.byte_count(1, TOPO3, local=False) == n * (Q - 1)
+    a2a = REGISTRY["alltoall"]["staged"](TOPO3)
+    pairwise = REGISTRY["alltoall"]["pairwise"](TOPO3)
+    assert a2a.message_count(TOPO3, local=False) == R * Q * (Q - 1)
+    assert pairwise.message_count(TOPO3, local=False) == R * R * Q * (Q - 1)
+    # bytes crossing the DCN are identical (aggregation cuts messages)
+    assert a2a.byte_count(1, TOPO3, local=False) \
+        == pairwise.byte_count(1, TOPO3, local=False)
+
+
+def test_staged_allreduce_dcn_rounds_scale_with_pods_only():
+    sched = REGISTRY["allreduce"]["staged"](TOPO3)
+    dcn_rounds = sum(
+        1 for rnd in sched.rounds
+        if any(not TOPO3.is_local(s, d) for s, d in rnd.perm))
+    assert dcn_rounds == 2 * (TOPO3.npods - 1)
+
+
+# ---------------------------------------------------------------------------
+# selection + tuner pickup
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_policy_selects_staged_on_3plus_levels():
+    for coll in sorted(FLAT):
+        assert selector.select(coll, TOPO3, 1 << 20,
+                               policy="fixed") == "staged"
+        # 2-level and flat topologies keep the historical defaults
+        assert selector.select(coll, Topology(8, 4),
+                               1 << 20, policy="fixed") != "staged"
+        # single-pod multi-axis tori too: with no DCN level to avoid,
+        # staged store-and-forward only adds ICI bytes
+        assert selector.select(coll, torus_topology(1, 4, 4, 4),
+                               1 << 20, policy="fixed") != "staged"
+
+
+def test_model_policy_includes_staged_candidates():
+    times = selector.modeled_times("allreduce", TOPO3, 1 << 20)
+    assert "staged" in times
+    name = selector.select("allreduce", TOPO3, 1 << 20, policy="model")
+    assert times[name] == min(times.values())
+
+
+def test_staged_guideline_violation_fires_and_names_cells():
+    entries = {"alltoall": {"20": {
+        "best": "pairwise", "nbytes": 1 << 20,
+        "times": {"pairwise": 1.0, "staged": 5.0}}}}
+    table = tuner.TunedTable(
+        fingerprint=TOPO3.fingerprint(), source="model", entries=entries)
+    out = tuner.verify_guidelines(table, TOPO3)
+    assert any("staged slower" in v for v in out), out
+    assert ("alltoall", "20") in tuner.violation_cells(table, TOPO3)
+    # ...and does not fire on 2-level topologies (no staged advantage)
+    assert tuner.verify_guidelines(table, Topology(8, 4)) == []
+
+
+def test_tuner_covers_staged_on_3level(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path / "cache.json"))
+    tuner.clear_cache()
+    table = tuner.tune(TOPO3, sizes=(1 << 14,), force_model=True)
+    for coll in tuner.COLLECTIVES:
+        rec = next(iter(table.entries[coll].values()))
+        assert "staged" in rec["times"], coll
+
+
+# ---------------------------------------------------------------------------
+# fingerprint round-trip over random level stacks (non-default links)
+# ---------------------------------------------------------------------------
+
+
+_ALPHAS = (1e-6, 2.5e-6, 1e-5, 3.3e-5)
+_BETAS = (1 / 25e9, 1 / 50e9, 1 / 12.5e9, 7.7e-11)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_fingerprint_roundtrip_random_levels_and_links(seed):
+    rng = np.random.default_rng(seed)
+    levels = []
+    for i in range(int(rng.integers(1, 5))):
+        custom = bool(rng.integers(0, 2))
+        link = (LinkModel(alpha=float(_ALPHAS[rng.integers(4)]),
+                          beta=float(_BETAS[rng.integers(4)]))
+                if custom else None)
+        levels.append((f"ax{i}", int(rng.integers(1, 5)), link))
+    ndcn = int(rng.integers(0, len(levels) + 1))
+    lvls = [TopoLevel(name, size,
+                      link or (DCN_LINK if i < ndcn else ICI_LINK),
+                      dcn=i < ndcn)
+            for i, (name, size, link) in enumerate(levels)]
+    topo = Topology.from_levels(lvls)
+    for kind in ("model", "cpu", "TPU v5e"):
+        back = Topology.from_fingerprint(topo.fingerprint(kind))
+        assert back == topo, (topo.fingerprint(kind), back, topo)
+        assert back.fingerprint(kind) == topo.fingerprint(kind)
+
+
+def test_fingerprint_custom_link_has_lm_section():
+    t = Topology.from_levels([
+        TopoLevel("dcn", 2, LinkModel(alpha=2e-5, beta=1e-10), dcn=True),
+        TopoLevel("x", 4, ICI_LINK)])
+    fp = t.fingerprint("cpu")
+    assert ":lm[" in fp and "2e-05" in fp
+    assert Topology.from_fingerprint(fp) == t
+    # default-link stacks keep the compact historical form
+    assert ":lm[" not in torus_topology(2, 4, 4).fingerprint()
+    with pytest.raises(ValueError):
+        Topology.from_fingerprint("cpu:n8:rpp4:lm[0=1.0/1.0/1]")
+    with pytest.raises(ValueError, match="out of range"):
+        Topology.from_fingerprint("cpu:n8:rpp4:lv[a-2.b-4]:lm[7=1.0/1.0/1]")
+
+
+# ---------------------------------------------------------------------------
+# ShardMapTransport half (forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_hierarchical_shardmap_conformance():
+    """Sim == ShardMap for every registered schedule + neighbor plans on
+    the 3-level 2-pods x 4x2 torus, and staged == flat reference on the
+    device path (16 forced host devices)."""
+    out = run_script("check_hierarchical.py")
+    assert "ALL OK" in out

@@ -33,7 +33,9 @@ def test_shardmap_transport_all_collectives():
 @pytest.mark.slow
 def test_unified_ir_transports_bit_exact():
     """SimTransport == ShardMapTransport on the unified IR for every
-    registered schedule x {flat, 2-pod, 2x4 torus} x {f32, bf16}."""
+    registered schedule x {flat, 2-pod, 2x4 torus, 3-level} x
+    {f32, bf16} (the deeper 2x(4x2) sweep runs from
+    test_hierarchical.py via check_hierarchical.py)."""
     out = run_script("check_unified_ir.py")
     assert "ALL OK" in out
 

@@ -42,6 +42,26 @@ def test_size_bucket_boundaries():
     assert tuner.size_bucket(0) == 0      # degenerate payloads clamp
 
 
+def test_size_bucket_exact_powers_of_two():
+    """Bucket b covers (2**(b-1), 2**b]: an exact power of two sits at
+    the top of its own bucket, one byte more rolls over."""
+    for b in range(1, 31):
+        assert tuner.size_bucket(2 ** b) == b
+        assert tuner.size_bucket(2 ** b + 1) == b + 1
+    for b in range(2, 31):
+        assert tuner.size_bucket(2 ** b - 1) == b
+    assert tuner.size_bucket(2 ** 0) == 0
+
+
+def test_size_bucket_degenerate_and_negative():
+    assert tuner.size_bucket(0) == 0
+    assert tuner.size_bucket(1) == 0
+    with pytest.raises(ValueError, match="must be >= 0 bytes, got -1"):
+        tuner.size_bucket(-1)
+    with pytest.raises(ValueError, match="-4096"):
+        tuner.size_bucket(-4096)
+
+
 @settings(max_examples=30, deadline=None)
 @given(a=st.integers(1, 1 << 30), b=st.integers(1, 1 << 30))
 def test_size_bucket_monotone(a, b):
@@ -224,3 +244,204 @@ def test_guidelines_pass_on_consistent_table():
         "alltoall": {"pairwise": 1.0, "hierarchical": 0.8},
     })
     assert tuner.verify_guidelines(good, TOPO) == []
+
+
+def test_violation_cells_name_offending_entries():
+    t = _synthetic_table({"allgather": {"ring": 5.0}})
+    t.entries["allgather"]["14"] = {"best": "ring", "nbytes": 16384,
+                                    "times": {"ring": 1.0}}
+    assert tuner.violation_cells(t) == [("allgather", "10"),
+                                        ("allgather", "14")]
+    bad = _synthetic_table({
+        "allreduce": {"ring_rs_ag": 10.0},
+        "reduce_scatter": {"ring": 1.0},
+        "allgather": {"ring": 1.0},
+    })
+    assert set(tuner.violation_cells(bad)) == {
+        ("allreduce", "10"), ("reduce_scatter", "10"), ("allgather", "10")}
+    assert tuner.violation_cells(_synthetic_table(
+        {"allgather": {"ring": 1.0}})) == []
+
+
+# ---------------------------------------------------------------------------
+# auto-retune on guideline violations (ensure_table heal path)
+# ---------------------------------------------------------------------------
+
+
+def _corrupt_cell(path, fp, coll, bucket, factor=99.0):
+    """Scale every timing in one persisted cell so monotonicity breaks."""
+    import json
+    blob = json.loads(path.read_text())
+    rec = blob[fp]["entries"][coll][bucket]
+    rec["times"] = {k: v * factor for k, v in rec["times"].items()}
+    rec["best"] = min(rec["times"], key=rec["times"].get)
+    path.write_text(json.dumps(blob))
+    tuner.clear_cache()
+
+
+def test_ensure_table_heals_only_violated_cells(tmp_path):
+    """Regression (ISSUE 3): a guideline violation injected into a
+    cached table is healed by ``ensure_table`` without re-measuring
+    untouched cells, and the persisted generation is bumped."""
+    path = tmp_path / "tuned.json"
+    table = tuner.tune(TOPO, sizes=SIZES, force_model=True)
+    assert table.generation == 0
+    pristine = copy.deepcopy(table.entries)
+    tuner.save_table(table, path=path)
+
+    lo = min(table.entries["allgather"], key=int)
+    _corrupt_cell(path, table.fingerprint, "allgather", lo)
+
+    loaded = tuner.load_table(table.fingerprint, path=path)
+    cells = tuner.violation_cells(loaded, TOPO)
+    # the corrupted bucket + its monotonicity partner (plus whatever
+    # persistent findings the model already exhibits, e.g. alltoall
+    # hierarchical-vs-pairwise at the largest bucket)
+    assert ("allgather", lo) in cells
+
+    calls = []
+    real = tuner._modeled
+    tuner._modeled = lambda s, t, nb: calls.append(nb) or real(s, t, nb)
+    try:
+        healed = tuner.ensure_table(TOPO, path=path, sizes=SIZES,
+                                    force_model=True)
+    finally:
+        tuner._modeled = real
+
+    # scoped: only the violated (collective, bucket) cells re-measured —
+    # one _modeled call per candidate per violated cell, nowhere near
+    # the full-tune count (len(COLLECTIVES) * len(SIZES) * candidates)
+    expected = sum(len(tuner._candidates(coll, TOPO))
+                   for coll, _ in cells)
+    assert len(calls) == expected, (len(calls), expected, cells)
+
+    # the corrupted cell is restored to the model values; every other
+    # cell (including other allgather buckets) is byte-identical
+    assert healed.entries == pristine
+    assert healed.generation == 1
+    assert healed.violations == table.violations
+
+    # the bumped generation is persisted
+    tuner.clear_cache()
+    assert tuner.load_table(table.fingerprint, path=path).generation == 1
+
+
+def test_ensure_table_heal_is_idempotent(tmp_path):
+    """A violation the substrate genuinely exhibits (the model's
+    alltoall finding at the largest bucket) re-confirms identically on
+    every heal without changing the table or inflating the
+    generation."""
+    path = tmp_path / "tuned.json"
+    table = tuner.tune(TOPO, sizes=SIZES, force_model=True)
+    tuner.save_table(table, path=path)
+    for _ in range(3):
+        healed = tuner.ensure_table(TOPO, path=path, sizes=SIZES,
+                                    force_model=True)
+        assert healed.generation == 0
+        assert healed.entries == table.entries
+
+
+def test_ensure_table_tunes_once_when_missing(tmp_path):
+    path = tmp_path / "tuned.json"
+    t1 = tuner.ensure_table(TOPO, path=path, sizes=(1024,),
+                            force_model=True)
+    assert t1.generation == 0 and path.exists()
+    calls = []
+    real = tuner._modeled
+    tuner._modeled = lambda s, t, nb: calls.append(nb) or real(s, t, nb)
+    try:
+        tuner.clear_cache()
+        t2 = tuner.ensure_table(TOPO, path=path, sizes=(1024,),
+                                force_model=True)
+    finally:
+        tuner._modeled = real
+    assert t2.entries == t1.entries
+    # loading a healthy persisted table measures nothing
+    assert calls == []
+
+
+def test_retune_cells_heals_neighbor_and_partitioned(tmp_path):
+    """The scoped retune covers every tuned path, not just the dense
+    collectives: corrupted neighbor / partitioned cells re-measure."""
+    path = tmp_path / "tuned.json"
+    table = tuner.autotune(TOPO, path=path, force_model=True,
+                           sizes=(1 << 14,))
+    for coll in (tuner.NEIGHBOR, tuner.PARTITIONED):
+        bucket = next(iter(table.entries[coll]))
+        good = copy.deepcopy(table.entries[coll][bucket])
+        table.entries[coll][bucket]["times"] = {
+            k: v * 97.0 for k, v in good["times"].items()}
+        changed = tuner.retune_cells(table, TOPO, [(coll, bucket)],
+                                     force_model=True)
+        assert changed == [(coll, bucket)]
+        assert table.entries[coll][bucket] == good, coll
+    assert table.generation == 2
+
+
+def test_heal_measures_newly_registered_algorithms(tmp_path):
+    """A table tuned before an algorithm was registered (e.g. pre-staged
+    releases) is stale, not healthy: healing re-measures the cells that
+    never saw the newcomer so tuned selection can pick it."""
+    path = tmp_path / "tuned.json"
+    table = tuner.tune(TOPO, sizes=(1024,), force_model=True)
+    for per in table.entries.values():      # simulate a pre-staged table
+        for rec in per.values():
+            rec["times"].pop("staged")
+            rec["best"] = min(rec["times"], key=rec["times"].get)
+    assert tuner.stale_cells(table, TOPO) == [
+        (coll, "10") for coll in tuner.COLLECTIVES]
+    tuner.save_table(table, path=path)
+    tuner.clear_cache()
+    healed = tuner.ensure_table(TOPO, path=path, sizes=(1024,),
+                                force_model=True)
+    assert healed.generation == 1
+    for coll in tuner.COLLECTIVES:
+        assert "staged" in healed.entries[coll]["10"]["times"], coll
+    tuner.clear_cache()
+    assert tuner.load_table(table.fingerprint, path=path).generation == 1
+
+
+def test_cell_differs_tolerates_measurement_noise():
+    rec = {"best": "ring", "nbytes": 1024,
+           "times": {"ring": 1.0, "bruck": 2.0}}
+    within = {"best": "ring", "nbytes": 1024,
+              "times": {"ring": 1.05, "bruck": 1.95}}
+    assert not tuner._cell_differs(within, rec, tol=1.10)
+    beyond = {"best": "ring", "nbytes": 1024,
+              "times": {"ring": 1.5, "bruck": 2.0}}
+    assert tuner._cell_differs(beyond, rec, tol=1.10)
+    flipped = {"best": "bruck", "nbytes": 1024,
+               "times": {"ring": 1.05, "bruck": 0.98}}
+    assert tuner._cell_differs(flipped, rec, tol=1.10)
+    grew = {"best": "ring", "nbytes": 1024,
+            "times": {"ring": 1.0, "bruck": 2.0, "staged": 3.0}}
+    assert tuner._cell_differs(grew, rec, tol=1.10)
+
+
+def test_api_ensure_tuned_sets_policy_and_reuses_table(tmp_path):
+    path = tmp_path / "tuned.json"
+    try:
+        table = api.ensure_tuned(TOPO, path=path, sizes=(1024,),
+                                 force_model=True)
+        assert api.get_default_policy() == "tuned"
+        assert table.fingerprint == tuner.substrate_fingerprint(
+            TOPO, force_model=True)
+    finally:
+        api.set_default_policy("model")
+    t2 = api.ensure_tuned(TOPO, path=path, sizes=(1024,),
+                          force_model=True, set_policy=False)
+    assert api.get_default_policy() == "model"     # set_policy=False
+    assert t2.entries == table.entries             # loaded, not re-tuned
+
+
+def test_table_generation_roundtrips(tmp_path, model_table):
+    path = tmp_path / "tuned.json"
+    bumped = copy.deepcopy(model_table)
+    bumped.generation = 7
+    tuner.save_table(bumped, path=path)
+    tuner.clear_cache()
+    assert tuner.load_table(bumped.fingerprint, path=path).generation == 7
+    # tables persisted before the generation field default to 0
+    legacy = tuner.TunedTable.from_dict(
+        {"fingerprint": "cpu:n8:rpp4", "source": "model", "entries": {}})
+    assert legacy.generation == 0

@@ -3,9 +3,11 @@ neighborhood, and partitioned paths; multi-level ``Topology``; tuner
 coverage for the non-dense paths.
 
 The SimTransport-vs-ShardMapTransport bit-exactness half (every
-registered schedule x {flat, 2-pod, 2x4 torus} x {float32, bfloat16})
-runs on forced host devices in device_scripts/check_unified_ir.py via
-test_shardmap.py; here we cover everything that needs no devices.
+registered schedule x {flat, 2-pod, 2x4 torus, 3-level} x {float32,
+bfloat16}) runs on forced host devices in
+device_scripts/check_unified_ir.py via test_shardmap.py; here we cover
+everything that needs no devices.  The staged (3+-level) builders'
+dedicated conformance suite is tests/test_hierarchical.py.
 """
 import numpy as np
 import pytest
