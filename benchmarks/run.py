@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m benchmarks.run
     PYTHONPATH=src python -m benchmarks.run --smoke   # schedule-build CI
     PYTHONPATH=src python -m benchmarks.run --smoke --json smoke.json
+    PYTHONPATH=src python -m benchmarks.run --transport-json BENCH_transport.json
 
 ``--smoke`` skips the device benchmarks and instead builds **every**
 registered schedule (all dense families incl. the level-staged
@@ -15,6 +16,12 @@ regression fails CI even on a runner with zero devices.
 ``--json PATH`` additionally writes every emitted row (modeled timings
 included) plus the wall time as a JSON document — the CI artifact the
 timing-trend jobs consume.
+
+``--transport-json PATH`` runs only the persistent-executor transport
+benchmark (fusion round counts, vectorized sim-exec walltime, shardmap
+trace counts — see benchmarks.bench_transport) and writes its JSON;
+``--check-transport BASELINE`` adds the non-blocking >2x walltime trend
+warning against the committed ``BENCH_transport.json``.
 """
 from __future__ import annotations
 
@@ -110,6 +117,24 @@ def main(argv=None) -> None:
             raise SystemExit("--json requires a file path")
         json_path = argv[i + 1]
     t0 = time.time()
+    if "--transport-json" in argv:
+        # bench_transport forces the 8-host-device XLA flag at import
+        # (must happen before anything else initializes jax)
+        from benchmarks import bench_transport
+        from benchmarks.common import header
+
+        def operand(flag: str) -> str:
+            i = argv.index(flag)
+            if i + 1 >= len(argv):
+                raise SystemExit(f"{flag} requires a file path")
+            return argv[i + 1]
+
+        header()
+        args = ["--json", operand("--transport-json")]
+        if "--check-transport" in argv:
+            args += ["--check", operand("--check-transport")]
+        bench_transport.main(args)
+        return
     if "--smoke" in argv:
         smoke()
         if json_path:
@@ -122,11 +147,11 @@ def main(argv=None) -> None:
     from benchmarks import bench_tuner
     from benchmarks import (bench_allgather, bench_alltoall, bench_neighbor,
                             bench_partitioned, bench_paths,
-                            bench_moe_dispatch)
+                            bench_moe_dispatch, bench_transport)
 
     benches = [bench_allgather, bench_alltoall, bench_neighbor,
                bench_partitioned, bench_paths, bench_moe_dispatch,
-               bench_tuner]
+               bench_tuner, bench_transport]
     header()
     t0 = time.time()
     for mod in benches:

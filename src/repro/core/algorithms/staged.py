@@ -158,6 +158,25 @@ def alltoall_staged(topo: Topology) -> CommSchedule:
                         name="alltoall.staged", local_post=sim.post())
 
 
+def serialized_pod_allgather(topo: Topology) -> CommSchedule:
+    """Deliberately NAIVE staged allgather: each pod's intra-pod ring
+    stage emitted back-to-back instead of ``parallel_fuse``'d — the
+    rank-disjoint per-pod stages a careless staged builder serializes.
+    NOT registered: this is the reference foil for the persistent
+    executor's fusion pass (core.executor), which must recover the
+    parallel form (``npods * (R-1)`` rounds -> ``R-1``).  Shared by
+    tests/test_executor.py, tests/device_scripts/check_executor.py and
+    benchmarks/bench_transport.py so the corpus entry and its expected
+    round counts live in one place."""
+    n = topo.nranks
+    rounds: list[CommRound] = []
+    for p in range(topo.npods):
+        members = list(topo.pod_ranks(p))
+        rounds += ag._ring_rounds(n, members, [[r] for r in members])
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
+                        name="allgather.staged_naive")
+
+
 # Registered per family by repro.core.algorithms.REGISTRY (registering
 # here would cycle: this module imports the family modules' sub-stage
 # builders).

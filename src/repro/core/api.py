@@ -12,7 +12,11 @@ include ``axis_names``; ``algorithm="xla"`` routes to the substrate
 other name routes to a persistent ``Schedule`` executed over ``ppermute``.
 
 Schedules are built once per (collective, algorithm, topology) and cached
-— MPI Advance's "persistent" initialization-time setup.
+— MPI Advance's "persistent" initialization-time setup — and execute
+through the process-level compiled-executor cache (``core.executor``):
+tables baked on device once, rounds fused, one jit trace per (schedule,
+shape, dtype).  ``executor_cache_stats()`` / ``clear_executor_cache()``
+expose that layer.
 """
 from __future__ import annotations
 
@@ -66,7 +70,26 @@ def topology_from_axes(axis_names: Sequence[str]) -> Topology:
 
 @functools.lru_cache(maxsize=None)
 def _schedule(collective: str, algorithm: str, topo: Topology):
-    return REGISTRY[collective][algorithm](topo)
+    sched = REGISTRY[collective][algorithm](topo)
+    # warm the persistent-executor cache at plan time (MPI-4 persistent
+    # init): by the first traced call the tables are already baked and
+    # the fusion pass has run
+    from repro.core import executor
+    executor.get_executor(sched)
+    return sched
+
+
+def executor_cache_stats() -> dict:
+    """Compiled-executor cache telemetry: size, hit/miss counts, and per
+    executor (rounds before/after fusion, trace/sim-run counters)."""
+    from repro.core import executor
+    return executor.cache_stats()
+
+
+def clear_executor_cache() -> None:
+    """Drop every compiled executor (tests; after env-flag flips)."""
+    from repro.core import executor
+    executor.clear_cache()
 
 
 # Selection policy used when algorithm="auto" and no per-call ``policy=``
@@ -247,5 +270,5 @@ __all__ = [
     "mpix_allgather", "mpix_allreduce", "mpix_reduce_scatter",
     "mpix_alltoall", "mpix_neighbor_alltoallv", "make_neighbor_plan",
     "topology_from_axes", "set_default_policy", "get_default_policy",
-    "ensure_tuned",
+    "ensure_tuned", "executor_cache_stats", "clear_executor_cache",
 ]

@@ -1,0 +1,537 @@
+"""Persistent-executor compilation of ``CommSchedule``s.
+
+MPI Advance's core performance move is hoisting all collective setup
+into one-time persistent initialization (MPI-4 persistent collectives)
+so the steady-state path pays only for data movement.  The plan layer
+already does the algorithmic half at build time; this module does the
+*execution* half: a ``CommSchedule`` is lowered once to a
+``CompiledExec`` and cached process-wide, so repeated execution —
+training steps, tuner timing loops, bit-exactness sweeps — never
+re-derives tables, re-uploads constants, or re-runs Python shape logic.
+
+The compile pass (all steps skipped with ``optimize=False`` or
+``REPRO_EXEC_OPTIMIZE=0``):
+
+  1. **local_pre fold** — a bijective pre-permutation (Bruck rotation)
+     is composed into every round's gather/scatter tables and into
+     ``local_post``, eliding one whole-buffer gather per execution.
+  2. **Round fusion** — each non-reduce round merges, whole, into the
+     earliest earlier round where the ``schedule.can_fuse`` legality
+     rule holds (disjoint src/dst sets, no scatter->gather aliasing
+     across the gap) AND the padded message widths match (a
+     profitability condition on top of legality: unequal widths would
+     pad the narrower round's messages on the wire): one ``ppermute``
+     disappears per merge, a direct cut of the alpha term, and the
+     merged round's max-priced time is ``max(a, b)`` — never slower
+     under the alpha-beta model.  Reduce rounds are barriers —
+     accumulation order is preserved bit-for-bit.
+  3. **Dead-slot elision** — message positions whose scatter target is
+     ``-1`` (dropped on arrival) and edges that deliver nothing are
+     removed from the execution tables (accounting still reads the
+     original schedule).
+  4. **Scratch-zero elision** — the per-round scratch-row re-zeroing of
+     the historical lowering is dropped: every scratch read is masked,
+     so the zeroing was dead work.
+  5. **Baked tables** — per-round index tables are materialized once
+     (numpy for the simulator, device constants for shard_map) instead
+     of per trace.
+
+Both transports route through here (``transport.SimTransport`` /
+``ShardMapTransport.run`` are thin lookups).  The executor cache is
+keyed by (schedule fingerprint, optimize flag, validation flag); the
+jit layer above adds (shape, dtype, axis_names) exactly once per
+combination — ``CompiledExec.trace_count`` counts lowerings so tests
+can prove the persistent-collective property: one trace, many steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.schedule import (CommRound, CommSchedule, can_fuse,  # noqa: F401 (can_fuse re-exported: executor is its consumer-facing home)
+                                 validate_schedules_enabled)
+
+
+def optimize_enabled() -> bool:
+    """True unless ``REPRO_EXEC_OPTIMIZE`` disables the peephole passes
+    (escape hatch; the unoptimized executor mirrors the historical
+    round-by-round lowering and is the fused path's reference)."""
+    v = os.environ.get("REPRO_EXEC_OPTIMIZE", "1").strip().lower()
+    return v not in ("", "0", "false", "off", "no")
+
+
+# ---------------------------------------------------------------------------
+# edge extraction + compaction (the fusion pass)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Edge:
+    """One (src -> dst) message: aligned gather/scatter position vectors
+    (position j of the wire payload reads ``gather[j]`` on src and lands
+    at ``scatter[j]`` on dst; -1 gathers send zeros)."""
+
+    src: int
+    dst: int
+    gather: np.ndarray           # int, [k_e]
+    scatter: np.ndarray          # int, [k_e]; all >= 0 after compression
+    has_payload: bool
+
+    @property
+    def reads(self) -> set:
+        return set(int(b) for b in self.gather[self.gather >= 0])
+
+    @property
+    def writes(self) -> set:
+        return set(int(b) for b in self.scatter[self.scatter >= 0])
+
+
+def _round_edges(rnd: CommRound, compress: bool) -> list[_Edge]:
+    out = []
+    for s, d in rnd.perm:
+        g = np.asarray(rnd.gather_idx[s], np.int64)
+        t = np.asarray(rnd.scatter_idx[d], np.int64)
+        if compress:
+            keep = t >= 0            # dropped-on-arrival slots are dead
+            g, t = g[keep], t[keep]
+            if not len(t):           # message delivers nothing: elide
+                continue
+        out.append(_Edge(int(s), int(d), g, t,
+                         rnd.payload is not None))
+    return out
+
+
+class _Bucket:
+    """One output round under construction: matching + dataflow state."""
+
+    def __init__(self, reduce: bool):
+        self.reduce = reduce
+        self.edges: list[_Edge] = []
+        self.srcs: set[int] = set()
+        self.dsts: set[int] = set()
+        self.reads: dict[int, set] = {}    # rank -> rows gathered
+        self.writes: dict[int, set] = {}   # rank -> rows scattered
+
+    def add(self, e: _Edge) -> None:
+        self.edges.append(e)
+        self.srcs.add(e.src)
+        self.dsts.add(e.dst)
+        self.reads.setdefault(e.src, set()).update(e.reads)
+        self.writes.setdefault(e.dst, set()).update(e.writes)
+
+    def remove(self, e: _Edge) -> None:
+        """Roll back a tentative placement.  Exact because the matching
+        invariant makes e the only edge with src ``e.src`` (sole
+        contributor to ``reads[e.src]``) and dst ``e.dst`` (sole
+        contributor to ``writes[e.dst]``) in this bucket."""
+        self.edges.remove(e)
+        self.srcs.discard(e.src)
+        self.dsts.discard(e.dst)
+        self.reads.pop(e.src, None)
+        self.writes.pop(e.dst, None)
+
+
+def _compact(rounds: tuple[CommRound, ...], compress: bool
+             ) -> tuple[list[_Bucket], int]:
+    """Fuse whole rounds into earlier ones (the fusion pass).
+
+    Each non-reduce round merges — whole, into ONE earlier round —
+    when the ``can_fuse`` legality rule holds against that target and
+    no intermediate round creates a data hazard.  Whole-round
+    single-target merging is the shape that is *provably cost-safe*
+    without a topology: src/dst sets stay disjoint, so the merged
+    round's per-port costs are the union of the two rounds' and its
+    max-priced time is ``max(a, b) <= a + b`` — one alpha strictly
+    saved, no beta added.  (Per-edge redistribution was measurably
+    harmful: splitting edges that overlapped in one round across
+    several can raise several rounds' maxima; an early draft did this
+    and regressed real neighbor plans by >25% modeled time.)  Equal
+    message width is also required — merging a k=1 round into a k=4
+    round would pad the k=1 messages to 4 slots on the wire.
+
+    Legality of merging round j into candidate c (``schedule.can_fuse``
+    plus the non-adjacency condition):
+      * neither round reduces; reduce rounds are barriers (float
+        accumulation order is preserved bit-for-bit);
+      * matching — no rank may send or receive in both rounds;
+      * RAW/WAW — no round in [c, j) writes rows that j's edges gather,
+        and no round in [c, j) writes rows that j's edges scatter
+        (j's writes must still land last);
+      * WAR — rounds in (c, j) must not gather rows j's edges scatter
+        (round c itself may: fused rounds gather before scattering);
+      * equal padded width k.
+    Returns (buckets, count of edges in fused rounds).
+    """
+    buckets: list[_Bucket] = []
+    barrier = 0
+    migrated = 0
+    for rnd in rounds:
+        edges = _round_edges(rnd, compress)
+        base = _Bucket(rnd.reduce)
+        buckets.append(base)
+        for e in edges:
+            base.add(e)
+        if rnd.reduce:
+            barrier = len(buckets)
+            continue
+        if not edges:
+            continue
+        base_i = len(buckets) - 1
+        # hazard lower bound: the earliest round this whole round may
+        # merge into without reordering a read/write pair
+        lo = barrier
+        for bi in range(base_i):
+            b = buckets[bi]
+            for e in edges:
+                if (b.writes.get(e.src, _EMPTY) & e.reads
+                        or b.writes.get(e.dst, _EMPTY) & e.writes):
+                    lo = max(lo, bi + 1)          # RAW / WAW
+                elif b.reads.get(e.dst, _EMPTY) & e.writes:
+                    lo = max(lo, bi)              # WAR (same-round ok)
+        width = max(len(e.gather) for e in edges)
+        for bi in range(lo, base_i):
+            b = buckets[bi]
+            if b.reduce or not b.edges:
+                continue
+            if max(len(e.gather) for e in b.edges) != width:
+                continue
+            if any(e.src in b.srcs or e.dst in b.dsts for e in edges):
+                continue
+            for e in edges:                        # commit the merge
+                base.remove(e)
+                b.add(e)
+            migrated += len(edges)
+            break
+    return [b for b in buckets if b.edges], migrated
+
+
+_EMPTY: frozenset = frozenset()
+
+
+def _rebuild_round(bucket: _Bucket, nranks: int) -> CommRound:
+    k = max((len(e.gather) for e in bucket.edges), default=0)
+    k = max(k, 1)
+    gi = np.full((nranks, k), -1, np.int64)
+    si = np.full((nranks, k), -1, np.int64)
+    perm = []
+    payload = None
+    if any(e.has_payload for e in bucket.edges):
+        payload = np.zeros(nranks, np.int64)
+    for e in bucket.edges:
+        perm.append((e.src, e.dst))
+        gi[e.src, : len(e.gather)] = e.gather
+        si[e.dst, : len(e.scatter)] = e.scatter
+        if payload is not None:
+            payload[e.src] = int((e.gather >= 0).sum())
+    return CommRound(perm=tuple(perm), gather_idx=gi, scatter_idx=si,
+                     reduce=bucket.reduce, payload=payload)
+
+
+# ---------------------------------------------------------------------------
+# local_pre fold
+# ---------------------------------------------------------------------------
+
+
+def _bijective_rows(table: np.ndarray, num_slots: int) -> bool:
+    if table.shape[1] != num_slots:
+        return False
+    want = np.arange(num_slots)
+    return all(np.array_equal(np.sort(table[r]), want)
+               for r in range(table.shape[0]))
+
+
+def _fold_pre(schedule: CommSchedule):
+    """Compose a bijective ``local_pre`` into every round table and the
+    final ``local_post`` (relabel-through): logical slot ``i`` of the
+    pre-permuted buffer lives at physical slot ``pre[r, i]``, so every
+    index is rewritten through ``pre`` and the pre-gather disappears.
+    Returns (rounds, local_post, folded?)."""
+    pre = schedule.local_pre
+    if pre is None or not _bijective_rows(np.asarray(pre),
+                                          schedule.num_slots):
+        return schedule.rounds, schedule.local_post, False
+    pre = np.asarray(pre, np.int64)
+    rounds = []
+    for rnd in schedule.rounds:
+        gi = rnd.gather_idx.copy().astype(np.int64)
+        si = rnd.scatter_idx.copy().astype(np.int64)
+        for r in range(schedule.nranks):
+            gmask = gi[r] >= 0
+            gi[r, gmask] = pre[r, gi[r, gmask]]
+            smask = si[r] >= 0
+            si[r, smask] = pre[r, si[r, smask]]
+        rounds.append(CommRound(perm=rnd.perm, gather_idx=gi,
+                                scatter_idx=si, reduce=rnd.reduce,
+                                payload=rnd.payload))
+    if schedule.local_post is None:
+        post = pre
+    else:
+        old = np.asarray(schedule.local_post, np.int64)
+        post = np.stack([pre[r, old[r]]
+                         for r in range(schedule.nranks)])
+    return tuple(rounds), post, True
+
+
+# ---------------------------------------------------------------------------
+# the compiled executor
+# ---------------------------------------------------------------------------
+
+
+class _ExecRound:
+    """One compiled round: full per-rank tables (shard_map) plus dense
+    per-edge tables (vectorized simulator), baked once."""
+
+    def __init__(self, rnd: CommRound, num_slots: int):
+        self.perm = rnd.perm
+        self.reduce = rnd.reduce
+        self.k = rnd.k
+        self.gather_idx = np.asarray(rnd.gather_idx, np.int32)
+        self.scatter_idx = np.asarray(rnd.scatter_idx, np.int32)
+        # vectorized-sim tables: one fancy-indexed gather/permute/scatter
+        # per round; -1 entries are routed via the scratch row num_slots.
+        self.src = np.asarray([s for s, _ in rnd.perm], np.int64)
+        self.dst = np.asarray([d for _, d in rnd.perm], np.int64)
+        g = self.gather_idx[self.src].astype(np.int64)      # [m, k]
+        t = self.scatter_idx[self.dst].astype(np.int64)
+        self.g_mask = g >= 0
+        self.t_mask = t >= 0
+        self.g_safe = np.where(self.g_mask, g, num_slots)
+        self.t_safe = np.where(self.t_mask, t, num_slots)
+        # duplicate live targets on one rank (only possible with schedule
+        # validation off) force unbuffered accumulation for reduce rounds
+        self.dup_targets = rnd.reduce and any(
+            len(np.unique(row[m])) != int(m.sum())
+            for row, m in zip(t, self.t_mask))
+        self._jnp = None
+
+    def jnp_tables(self):
+        """Device-resident gather/scatter tables, materialized once and
+        reused by every subsequent trace (persistent-collective style).
+        ``ensure_compile_time_eval`` makes them concrete arrays even when
+        first touched from inside a jit/shard_map trace — caching a
+        tracer would leak it into later traces."""
+        if self._jnp is None:
+            import jax
+            with jax.ensure_compile_time_eval():
+                self._jnp = (jnp.asarray(self.gather_idx),
+                             jnp.asarray(self.scatter_idx))
+        return self._jnp
+
+
+class CompiledExec:
+    """A ``CommSchedule`` lowered for repeated execution.
+
+    ``run_sim`` / ``run_shardmap`` are the two backends' steady-state
+    entry points; both execute the *same* compiled rounds, so the
+    bit-exactness contract between the transports is preserved by
+    construction.  Counters: ``trace_count`` (shard_map lowerings —
+    one per (shape, dtype, mesh) when the jit layer caches properly),
+    ``sim_runs`` (simulator executions).
+    """
+
+    def __init__(self, schedule: CommSchedule, optimize: bool):
+        self.schedule = schedule
+        self.optimize = optimize
+        self.nranks = schedule.nranks
+        self.num_slots = schedule.num_slots
+        self.rounds_before = schedule.num_rounds
+        self.trace_count = 0
+        self.sim_runs = 0
+        if optimize:
+            rounds, post, self.pre_folded = _fold_pre(schedule)
+            folded = CommSchedule(
+                nranks=schedule.nranks, num_slots=schedule.num_slots,
+                rounds=rounds, name=schedule.name,
+                slot_bytes=schedule.slot_bytes,
+                local_pre=None if self.pre_folded else schedule.local_pre,
+                local_post=post, out_slots=schedule.out_slots,
+                out_offsets=schedule.out_offsets)
+            buckets, self.migrated_edges = _compact(folded.rounds,
+                                                    compress=True)
+            compiled_rounds = tuple(_rebuild_round(b, self.nranks)
+                                    for b in buckets)
+            self.local_pre = folded.local_pre
+            self.local_post = post
+        else:
+            self.pre_folded = False
+            self.migrated_edges = 0
+            compiled_rounds = schedule.rounds
+            self.local_pre = schedule.local_pre
+            self.local_post = schedule.local_post
+        self.compiled_schedule = CommSchedule(
+            nranks=schedule.nranks, num_slots=schedule.num_slots,
+            rounds=compiled_rounds,
+            name=schedule.name + ("+fused" if optimize else "+compiled"),
+            slot_bytes=schedule.slot_bytes, local_pre=self.local_pre,
+            local_post=self.local_post, out_slots=schedule.out_slots,
+            out_offsets=schedule.out_offsets)
+        self.rounds_after = len(compiled_rounds)
+        self._rounds = tuple(_ExecRound(r, self.num_slots)
+                             for r in compiled_rounds)
+        self._pre = (None if self.local_pre is None
+                     else np.asarray(self.local_pre, np.int64))
+        self._post = (None if self.local_post is None
+                      else np.asarray(self.local_post, np.int64))
+        self._jnp_pre = None
+        self._jnp_post = None
+
+    # -- numpy backend (vectorized; no per-rank/per-slot Python loops) ----
+    def run_sim(self, buf: np.ndarray) -> np.ndarray:
+        self.sim_runs += 1
+        n = self.nranks
+        assert buf.shape[0] == n and buf.shape[1] == self.num_slots, (
+            buf.shape, n, self.num_slots)
+        rows = np.arange(n)[:, None]
+        if self._pre is not None:
+            buf = buf[rows, self._pre]
+        # one scratch row per rank absorbs -1 routes (same trick as the
+        # shard_map lowering, so the two backends share index tables)
+        work = np.concatenate(
+            [buf, np.zeros((n, 1) + buf.shape[2:], buf.dtype)], axis=1)
+        # masking is done with in-place boolean assignment, NOT np.where:
+        # np.where(mask, mldtypes_array, python_scalar) corrupts the heap
+        # on numpy 2.0.x + ml_dtypes (bfloat16 buffers)
+        for rnd in self._rounds:
+            payload = work[rnd.src[:, None], rnd.g_safe]     # [m, k, ...]
+            payload[~rnd.g_mask] = 0
+            if rnd.reduce:
+                # live targets are distinct per dst (schedule invariant),
+                # so buffered fancy-index accumulation is exact; -1 slots
+                # collapse onto the scratch row, which is never read
+                payload[~rnd.t_mask] = 0
+                idx = (rnd.dst[:, None], rnd.t_safe)
+                if rnd.dup_targets:
+                    np.add.at(work, idx, payload)
+                else:
+                    work[idx] = work[idx] + payload
+            else:
+                work[rnd.dst[:, None], rnd.t_safe] = payload
+        out = work[:, : self.num_slots]
+        if self._post is not None:
+            out = out[rows, self._post]
+        return np.ascontiguousarray(out)
+
+    # -- shard_map backend (called inside an ambient shard_map trace) -----
+    def run_shardmap(self, buf, rank, axis_arg):
+        import jax
+
+        self.trace_count += 1
+        nb = self.num_slots
+        if self._pre is not None:
+            if self._jnp_pre is None:
+                with jax.ensure_compile_time_eval():
+                    self._jnp_pre = jnp.asarray(self._pre, jnp.int32)
+            buf = buf[self._jnp_pre[rank]]
+        scratch = jnp.zeros((1,) + buf.shape[1:], buf.dtype)
+        x = jnp.concatenate([buf, scratch], axis=0)
+        for rnd in self._rounds:
+            x = self._shardmap_round(rnd, x, rank, axis_arg, nb)
+        out = x[:nb]
+        if self._post is not None:
+            if self._jnp_post is None:
+                with jax.ensure_compile_time_eval():
+                    self._jnp_post = jnp.asarray(self._post, jnp.int32)
+            out = out[self._jnp_post[rank]]
+        return out
+
+    def _shardmap_round(self, rnd: _ExecRound, x, rank, axis_arg, nb):
+        import jax
+
+        kdims = (rnd.k,) + (1,) * (x.ndim - 1)
+        gather_tbl, scatter_tbl = rnd.jnp_tables()
+        my_gather = gather_tbl[rank]                          # [k]
+        my_scatter = scatter_tbl[rank]
+        # Gather payload; -1 slots read the scratch row and are zeroed.
+        payload = x[jnp.where(my_gather >= 0, my_gather, nb)]
+        payload = jnp.where((my_gather >= 0).reshape(kdims), payload, 0)
+        recvd = jax.lax.ppermute(payload, axis_arg, list(rnd.perm))
+        # Scatter: -1 slots land on the scratch row (index nb).
+        tgt = jnp.where(my_scatter >= 0, my_scatter, nb)
+        if rnd.reduce:
+            masked = jnp.where((my_scatter >= 0).reshape(kdims), recvd, 0)
+            x = x.at[tgt].add(masked)
+        else:
+            # distinct targets per slot by construction (schedule invariant)
+            x = x.at[tgt].set(recvd)
+            if not self.optimize:
+                # historical lowering re-zeroed the scratch row; the
+                # compiled path elides it (every scratch read is masked)
+                x = x.at[nb].set(0)
+        return x
+
+    # -- reporting --------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "name": self.schedule.name,
+            "fingerprint": self.schedule.fingerprint(),
+            "optimize": self.optimize,
+            "rounds_before": self.rounds_before,
+            "rounds_after": self.rounds_after,
+            "migrated_edges": self.migrated_edges,
+            "pre_folded": self.pre_folded,
+            "trace_count": self.trace_count,
+            "sim_runs": self.sim_runs,
+        }
+
+
+# ---------------------------------------------------------------------------
+# process-level executor cache (the "persistent" in persistent executor)
+# ---------------------------------------------------------------------------
+
+
+_CACHE: dict[tuple, CompiledExec] = {}
+_HITS = {"hits": 0, "misses": 0}
+
+
+def compile_schedule(schedule: CommSchedule, *,
+                     optimize: bool | None = None) -> CompiledExec:
+    """Lower ``schedule`` to a fresh ``CompiledExec`` (uncached entry;
+    use ``get_executor`` for the shared process-level cache)."""
+    if optimize is None:
+        optimize = optimize_enabled()
+    return CompiledExec(schedule, bool(optimize))
+
+
+def get_executor(schedule: CommSchedule, *,
+                 optimize: bool | None = None) -> CompiledExec:
+    """The persistent-init entry: compile once per (schedule content,
+    optimize flag, validation flag), then reuse forever.
+
+    Keyed by ``CommSchedule.fingerprint()`` — two independently built
+    schedules with identical tables share one executor (and its baked
+    device tables and jit traces).  ``REPRO_VALIDATE_SCHEDULES`` is part
+    of the key because the compiled rounds are themselves CommRounds:
+    flipping validation on must not hand back tables built unchecked.
+    """
+    if optimize is None:
+        optimize = optimize_enabled()
+    key = (schedule.fingerprint(), bool(optimize),
+           validate_schedules_enabled())
+    ex = _CACHE.get(key)
+    if ex is not None:
+        _HITS["hits"] += 1
+        return ex
+    _HITS["misses"] += 1
+    ex = CompiledExec(schedule, bool(optimize))
+    _CACHE[key] = ex
+    return ex
+
+
+def clear_cache() -> None:
+    """Drop every compiled executor (tests; after env-flag flips)."""
+    _CACHE.clear()
+    _HITS["hits"] = _HITS["misses"] = 0
+
+
+def cache_stats() -> dict:
+    """Aggregate cache + per-executor stats for telemetry/benchmarks."""
+    return {
+        "size": len(_CACHE),
+        "hits": _HITS["hits"],
+        "misses": _HITS["misses"],
+        "executors": [ex.stats() for ex in _CACHE.values()],
+    }

@@ -151,6 +151,16 @@ class NeighborPlan:
     def num_rounds(self) -> int:
         return self.schedule.num_rounds
 
+    @property
+    def num_compiled_rounds(self) -> int:
+        """Round count after persistent-executor compilation.  The
+        greedy edge coloring already packs rounds tightly, so this
+        usually equals ``num_rounds`` — the executor's drain pass only
+        deletes a round when every one of its edges legally overlaps
+        earlier rounds (and never redistributes edges otherwise)."""
+        from repro.core import executor
+        return executor.get_executor(self.schedule).rounds_after
+
     # -- accounting (paper claim: aggregation cuts DCN bytes/messages) ----
     def traffic(self, elem_bytes: int = 1) -> dict:
         return self.schedule.traffic(self.topo, elem_bytes)

@@ -38,6 +38,7 @@ plan builds stay cheap; the test suite turns it on via conftest.py).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
 from typing import Sequence
 
@@ -132,6 +133,58 @@ class CommRound:
             return int(self.payload[src])
         return int((self.gather_idx[src] >= 0).sum())
 
+    # -- fusion-legality metadata (consumed by core.executor) --------------
+    @property
+    def src_set(self) -> frozenset[int]:
+        return frozenset(s for s, _ in self.perm)
+
+    @property
+    def dst_set(self) -> frozenset[int]:
+        return frozenset(d for _, d in self.perm)
+
+    def reads(self, rank: int) -> frozenset[int]:
+        """Buffer rows rank reads this round (its gather sources, when it
+        is a source; empty otherwise)."""
+        if rank not in self.src_set:
+            return frozenset()
+        row = self.gather_idx[rank]
+        return frozenset(int(b) for b in row[row >= 0])
+
+    def writes(self, rank: int) -> frozenset[int]:
+        """Buffer rows rank overwrites/accumulates this round (its live
+        scatter targets, when it is a destination; empty otherwise)."""
+        if rank not in self.dst_set:
+            return frozenset()
+        row = self.scatter_idx[rank]
+        return frozenset(int(b) for b in row[row >= 0])
+
+
+def can_fuse(a: CommRound, b: CommRound) -> bool:
+    """True when consecutive rounds ``a`` then ``b`` may execute as one
+    ``ppermute`` round with identical semantics.
+
+    Legality (the executor's whole-round peephole; the edge-granular
+    compaction in core.executor generalizes it):
+      * neither round reduces — a fused round has one accumulate flag,
+        and merging around an accumulation reorders float adds;
+      * the merged perm must stay a partial matching: no rank may be a
+        src in both rounds, or a dst in both rounds;
+      * no read-after-write hazard: in the fused round every gather
+        reads pre-round state, so rows ``a`` scatters into on some rank
+        must not alias rows ``b`` gathers from that rank.
+    (Write-after-read needs no check: fused execution gathers before it
+    scatters, exactly like the unfused order ``a``-reads-then-writes,
+    ``b``-reads-then-writes for disjoint src/dst sets.)
+    """
+    if a.reduce or b.reduce:
+        return False
+    if a.src_set & b.src_set or a.dst_set & b.dst_set:
+        return False
+    for r in a.dst_set & b.src_set:
+        if a.writes(r) & b.reads(r):
+            return False
+    return True
+
 
 @dataclasses.dataclass(frozen=True)
 class CommSchedule:
@@ -206,13 +259,22 @@ class CommSchedule:
 
     def byte_count(self, elem_bytes: int, topo: Topology | None = None,
                    local: bool | None = None) -> int:
-        """Total bytes moved (true counts if slot_bytes/payload set)."""
+        """Total bytes moved (true counts if slot_bytes/payload set).
+
+        ``slot_bytes`` is authoritative whenever it is set: the per-slot
+        true byte widths are summed over the live gather entries of each
+        edge (truncated to the round's ``payload`` count when both are
+        present — the first ``payload[src]`` live entries are the real
+        slots, the rest is padding).  Only slots with no recorded width
+        fall back to ``slots * elem_bytes``.
+        """
         total = 0
         for rnd, s, d, slots in self._edges(topo, local):
-            if rnd.payload is None and self.slot_bytes is not None:
-                for b in rnd.gather_idx[s]:
-                    if b >= 0:
-                        total += int(self.slot_bytes[b])
+            if self.slot_bytes is not None:
+                live = rnd.gather_idx[s][rnd.gather_idx[s] >= 0]
+                if rnd.payload is not None:
+                    live = live[: slots]
+                total += int(sum(int(self.slot_bytes[b]) for b in live))
             else:
                 total += slots * elem_bytes
         return total
@@ -245,6 +307,47 @@ class CommSchedule:
     @property
     def num_rounds(self) -> int:
         return len(self.rounds)
+
+    # -- identity -----------------------------------------------------------
+    def fingerprint(self) -> str:
+        """Content hash of everything execution-relevant (tables, perms,
+        flags, geometry) — the executor-cache key, the CommSchedule
+        analogue of ``Topology.fingerprint``.  Two independently built
+        schedules with identical tables share one fingerprint (and one
+        compiled executor); the display ``name`` is excluded.
+        """
+        memo = getattr(self, "_fingerprint", None)
+        if memo is not None:
+            return memo
+        h = hashlib.sha1()
+
+        def feed(tag: str, arr) -> None:
+            h.update(tag.encode())
+            if arr is None:
+                h.update(b"\x00")
+                return
+            a = np.ascontiguousarray(arr)
+            h.update(str(a.dtype).encode() + str(a.shape).encode())
+            h.update(a.tobytes())
+
+        h.update(f"n{self.nranks}:s{self.num_slots}:o{self.out_slots}"
+                 .encode())
+        feed("slot_bytes", self.slot_bytes)
+        feed("pre", self.local_pre)
+        feed("post", self.local_post)
+        feed("out_offsets", self.out_offsets)
+        for rnd in self.rounds:
+            h.update(b"R" + (b"+" if rnd.reduce else b"-"))
+            feed("perm", np.asarray(rnd.perm, np.int64).reshape(-1, 2)
+                 if rnd.perm else np.zeros((0, 2), np.int64))
+            feed("g", rnd.gather_idx)
+            feed("s", rnd.scatter_idx)
+            feed("p", rnd.payload)
+        fp = h.hexdigest()
+        # memo on the frozen instance (plain attribute, not a field:
+        # equality/repr are unaffected and the hash is deterministic)
+        object.__setattr__(self, "_fingerprint", fp)
+        return fp
 
 
 # Back-compat aliases: the pre-unification dense stack exported these.

@@ -126,6 +126,17 @@ def select_neighbor(graph, topo: Topology, *, policy: str | None = None,
             else "standard")
 
 
+def _executed_time(sched, topo: Topology, nbytes: int) -> float:
+    """alpha-beta time of what would actually run: the *compiled*
+    schedule (post executor fusion), matching ``tuner._modeled`` so the
+    model policy and the tuned tables price the same rounds."""
+    from repro.core import executor  # local: avoid import cycle
+
+    block_nbytes = max(1, nbytes // max(1, sched.num_blocks))
+    return executor.get_executor(sched).compiled_schedule.modeled_time(
+        topo, block_nbytes)
+
+
 @functools.lru_cache(maxsize=None)
 def _model_select(collective: str, topo: Topology, nbytes: int) -> str:
     from repro.core.algorithms import REGISTRY  # local: avoid import cycle
@@ -136,8 +147,7 @@ def _model_select(collective: str, topo: Topology, nbytes: int) -> str:
             sched = builder(topo)
         except NotApplicable:   # e.g. power-of-2-only algorithms
             continue
-        block_nbytes = max(1, nbytes // max(1, sched.num_blocks))
-        t = sched.modeled_time(topo, block_nbytes)
+        t = _executed_time(sched, topo, nbytes)
         if t < best_t:
             best_name, best_t = name, t
     assert best_name is not None
@@ -154,6 +164,5 @@ def modeled_times(collective: str, topo: Topology, nbytes: int) -> dict:
             sched = builder(topo)
         except NotApplicable:
             continue
-        out[name] = sched.modeled_time(
-            topo, max(1, nbytes // max(1, sched.num_blocks)))
+        out[name] = _executed_time(sched, topo, nbytes)
     return out

@@ -22,6 +22,13 @@ Buffers are slot-indexed: the working array has shape
 scratch row that absorbs sends/receives masked out with ``-1`` in the
 schedule tables, so execution is fully static (no data-dependent control
 flow, as required for TPU lowering).
+
+Since the persistent-executor compilation (core.executor) both ``run``
+methods are thin lookups: the schedule is lowered once to a cached
+``CompiledExec`` (tables baked, rounds fused, locals folded) and every
+subsequent call — every training step, every tuner repeat — reuses it,
+the MPI-4 persistent-collective split.  ``SimTransport.run_reference``
+keeps the original rank-by-rank loop as the executor's oracle.
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import executor
 from repro.core.schedule import CommRound, CommSchedule
 
 from repro import compat
@@ -68,6 +76,18 @@ class SimTransport(Transport):
         self.nranks = nranks
 
     def run(self, schedule: CommSchedule, buf: np.ndarray) -> np.ndarray:
+        """Compiled-path execution: one vectorized gather/permute/scatter
+        per round through the cached ``CompiledExec`` (no per-rank or
+        per-slot Python loops — what keeps ``tuner.autotune`` and the
+        bit-exactness sweeps fast)."""
+        assert buf.shape[0] == self.nranks, (buf.shape, self.nranks)
+        assert buf.shape[1] == schedule.num_slots
+        return executor.get_executor(schedule).run_sim(buf)
+
+    def run_reference(self, schedule: CommSchedule,
+                      buf: np.ndarray) -> np.ndarray:
+        """The original rank-by-rank loop — kept as the semantic oracle
+        the compiled/fused path is tested bit-exact against."""
         assert buf.shape[0] == self.nranks, (buf.shape, self.nranks)
         assert buf.shape[1] == schedule.num_slots
         buf = buf.copy()
@@ -137,39 +157,15 @@ class ShardMapTransport(Transport):
                            else tuple(axis_names))
 
     def run(self, schedule: CommSchedule, buf: jax.Array) -> jax.Array:
+        """Compiled-path execution: look up the cached ``CompiledExec``
+        (tables already on device, rounds fused) and trace its rounds.
+        The executor's trace counter makes the persistence observable:
+        repeated jitted calls with one (shape, dtype) lower exactly
+        once."""
         assert buf.shape[0] == schedule.num_slots
         rank = _flat_rank(self.axis_names)
-        if schedule.local_pre is not None:
-            buf = buf[jnp.asarray(schedule.local_pre, jnp.int32)[rank]]
-        scratch = jnp.zeros((1,) + buf.shape[1:], buf.dtype)
-        x = jnp.concatenate([buf, scratch], axis=0)
-        for rnd in schedule.rounds:
-            x = self._round(rnd, x, rank, schedule.num_slots)
-        out = x[: schedule.num_slots]
-        if schedule.local_post is not None:
-            out = out[jnp.asarray(schedule.local_post, jnp.int32)[rank]]
-        return out
+        return executor.get_executor(schedule).run_shardmap(
+            buf, rank, self._axis_arg())
 
     def _axis_arg(self):
         return self.axis_names if len(self.axis_names) > 1 else self.axis_names[0]
-
-    def _round(self, rnd: CommRound, x: jax.Array, rank, nb: int) -> jax.Array:
-        kdims = (rnd.k,) + (1,) * (x.ndim - 1)
-        gather_tbl = jnp.asarray(rnd.gather_idx, jnp.int32)  # [nranks, k]
-        scatter_tbl = jnp.asarray(rnd.scatter_idx, jnp.int32)
-        my_gather = gather_tbl[rank]                          # [k]
-        my_scatter = scatter_tbl[rank]
-        # Gather payload; -1 slots read the scratch row and are zeroed.
-        payload = x[jnp.where(my_gather >= 0, my_gather, nb)]
-        payload = jnp.where((my_gather >= 0).reshape(kdims), payload, 0)
-        recvd = jax.lax.ppermute(payload, self._axis_arg(), list(rnd.perm))
-        # Scatter: -1 slots land on the scratch row (index nb).
-        tgt = jnp.where(my_scatter >= 0, my_scatter, nb)
-        if rnd.reduce:
-            masked = jnp.where((my_scatter >= 0).reshape(kdims), recvd, 0)
-            x = x.at[tgt].add(masked)
-        else:
-            # distinct targets per slot by construction (schedule invariant)
-            x = x.at[tgt].set(recvd)
-            x = x.at[nb].set(0)
-        return x

@@ -232,8 +232,14 @@ def _measure(collective: str, algorithm: str, topo: Topology, nbytes: int,
 
 
 def _modeled(sched, topo: Topology, nbytes: int) -> float:
+    """alpha-beta model of what would actually execute: the *compiled*
+    schedule (post fusion), so model-source tables reward the same
+    round-count cuts the measured path enjoys."""
+    from repro.core import executor
+
     block = max(1, nbytes // max(1, sched.num_blocks))
-    return sched.modeled_time(topo, block)
+    return executor.get_executor(sched).compiled_schedule.modeled_time(
+        topo, block)
 
 
 def _candidates(collective: str, topo: Topology) -> dict:
@@ -249,24 +255,37 @@ def _candidates(collective: str, topo: Topology) -> dict:
     return out
 
 
+def _compiled_rounds(sched) -> dict:
+    """Round counts through the persistent-executor compile pass —
+    recorded next to every timing so the table shows *what executed*
+    (measurements run through the compiled path)."""
+    from repro.core import executor
+
+    ex = executor.get_executor(sched)
+    return {"before": ex.rounds_before, "after": ex.rounds_after}
+
+
 def _time_cell(collective: str, candidates: dict, topo: Topology,
                nbytes: int, *, measured: bool, repeats: int,
                include_xla: bool) -> dict:
     """Time every candidate for one (collective, size) cell."""
     times: dict = {}
+    rounds: dict = {}
     for name, sched in candidates.items():
         if measured:
             times[name] = _measure(collective, name, topo, int(nbytes),
                                    repeats)
         else:
             times[name] = _modeled(sched, topo, int(nbytes))
+        rounds[name] = _compiled_rounds(sched)
     if measured and include_xla:
         # the substrate's own lowering — MPI Advance's "system MPI"
         times["xla"] = _measure(collective, "xla", topo, int(nbytes),
                                 repeats)
     assert times, (collective, nbytes)
     return {"best": min(times, key=times.get), "nbytes": int(nbytes),
-            "times": {k: float(v) for k, v in times.items()}}
+            "times": {k: float(v) for k, v in times.items()},
+            "rounds": rounds}
 
 
 # ---------------------------------------------------------------------------
@@ -308,13 +327,17 @@ def measure_schedule(schedule, topo: Topology, *, slot_elems: int = 1,
 
 def schedule_time(schedule, topo: Topology, *, slot_nbytes: int,
                   repeats: int = 3, force_model: bool = False) -> float:
-    """Time any CommSchedule: measured on the live mesh when it fits,
-    alpha-beta ``CommSchedule.modeled_time`` otherwise."""
+    """Time any CommSchedule: measured on the live mesh when it fits
+    (which executes through the compiled/fused path), alpha-beta model
+    of the *compiled* schedule otherwise — both branches price the same
+    rounds."""
     if not force_model and jax.device_count() >= topo.nranks:
         return measure_schedule(
             schedule, topo, slot_elems=max(1, slot_nbytes // _ELEM),
             repeats=repeats)
-    return schedule.modeled_time(topo, slot_nbytes)
+    from repro.core import executor
+    return executor.get_executor(schedule).compiled_schedule.modeled_time(
+        topo, slot_nbytes)
 
 
 def tune(topo: Topology, *, collectives=COLLECTIVES, sizes=DEFAULT_SIZES,
@@ -391,6 +414,8 @@ def tune_neighbor(topo: Topology, *, sizes=DEFAULT_SIZES, repeats: int = 3,
             "best": min(times, key=times.get),
             "nbytes": total_rows * slot_nbytes,
             "times": {k: float(v) for k, v in times.items()},
+            "rounds": {mode: _compiled_rounds(plan.schedule)
+                       for mode, plan in plans.items()},
         }
     return per
 
@@ -404,6 +429,7 @@ def tune_partitioned(topo: Topology, *, sizes=DEFAULT_SIZES,
     per: dict = {}
     for nbytes in sizes:
         times: dict = {}
+        rounds: dict = {}
         for name, builder in REGISTRY[PARTITIONED].items():
             sched = builder(topo)
             chunks = sched.result_slots
@@ -411,10 +437,12 @@ def tune_partitioned(topo: Topology, *, sizes=DEFAULT_SIZES,
             times[name] = schedule_time(
                 sched, topo, slot_nbytes=slot_nbytes, repeats=repeats,
                 force_model=force_model)
+            rounds[name] = _compiled_rounds(sched)
         per[str(size_bucket(int(nbytes)))] = {
             "best": min(times, key=times.get),
             "nbytes": int(nbytes),
             "times": {k: float(v) for k, v in times.items()},
+            "rounds": rounds,
         }
     return per
 

@@ -45,7 +45,12 @@ checked = 0
 
 def bit_exact(sched, mesh, axes, dtype) -> bool:
     x = rng.normal(size=(N, sched.num_slots, FEAT)).astype(dtype)
-    want = SimTransport(N).run(sched, x)
+    # the oracle is the UNFUSED rank-by-rank reference loop, so this
+    # sweep proves the compiled/fused ppermute lowering (and the
+    # vectorized simulator, via test_executor.py) against pre-executor
+    # semantics — not merely the two compiled backends against each other
+    want = SimTransport(N).run_reference(sched, x)
+    assert np.array_equal(want, SimTransport(N).run(sched, x))
     tr = ShardMapTransport(N, axes)
     f = jax.jit(compat.shard_map(
         lambda b: tr.run(sched, b), mesh=mesh,

@@ -41,6 +41,16 @@ def test_unified_ir_transports_bit_exact():
 
 
 @pytest.mark.slow
+def test_executor_cache_trace_counts_and_fusion():
+    """Persistent-executor proof: one jit trace per (schedule, shape,
+    dtype) across repeated calls, api-path cache sharing, fused-vs-
+    reference bit-exactness where fusion cuts rounds, and cache
+    invalidation on env-flag / fingerprint changes."""
+    out = run_script("check_executor.py")
+    assert "ALL OK" in out
+
+
+@pytest.mark.slow
 def test_neighbor_plan_shardmap():
     out = run_script("check_neighbor_shardmap.py")
     assert "ALL OK" in out
