@@ -20,9 +20,10 @@ CLI:
         --json BENCH_transport.json [--check BENCH_transport.json]
 
 ``--check`` compares sim-exec wall time against a committed baseline and
-prints a (non-blocking) GitHub-style ``::warning`` on a >2x regression;
-the exit code stays 0 — walltimes are machine-dependent, the warning is
-a trend signal, not a gate.
+prints a (non-blocking) GitHub-style ``::warning`` on a >2x regression —
+walltimes are machine-dependent, the warning is a trend signal, not a
+gate.  A missing/malformed baseline file, however, exits non-zero: that
+is a wiring bug, and silently skipping it would disarm the trend job.
 """
 from __future__ import annotations
 
@@ -71,10 +72,15 @@ def _schedules(topo):
                 continue
     if topo.npods > 1:
         # the deliberately serialized per-pod staging: the corpus entry
-        # proving the executor recovers the parallel_fuse'd overlap
-        from repro.core.algorithms.staged import serialized_pod_allgather
+        # proving the executor recovers the parallel_fuse'd overlap —
+        # and its width-staggered sibling, which only the cost-model-
+        # armed pass can overlap fully (unequal-width merges)
+        from repro.core.algorithms.staged import (serialized_pod_allgather,
+                                                  staggered_pod_allgather)
         out.append(("allgather.staged_naive",
                     serialized_pod_allgather(topo)))
+        out.append(("allgather.staged_staggered",
+                    staggered_pod_allgather(topo)))
     rng = np.random.default_rng(0)
     graph = CommGraph.random(topo.nranks, n_local=6,
                              degree=min(topo.nranks - 1, 4), rng=rng,
@@ -86,27 +92,42 @@ def _schedules(topo):
 
 
 def bench_fusion() -> dict:
-    """Rounds before/after compilation per (topology, schedule)."""
+    """Rounds before/after compilation per (topology, schedule), for
+    both the topology-free pass and the cost-model-armed pass."""
     from repro.core import executor
 
     fusion: dict = {}
     fused_schedules = 0
+    armed_wins = 0
     for tname, topo in _topos().items():
         for label, sched in _schedules(topo):
             ex = executor.get_executor(sched)
+            armed = executor.get_executor(sched, topo=topo)
             key = f"{tname}.{label}"
             fusion[key] = {"before": ex.rounds_before,
                            "after": ex.rounds_after,
+                           "after_armed": armed.rounds_after,
                            "migrated_edges": ex.migrated_edges,
+                           "armed_merged_rounds": armed.armed_merged_rounds,
+                           "armed_split_edges": armed.armed_split_edges,
                            "pre_folded": ex.pre_folded}
             if ex.rounds_after < ex.rounds_before:
                 fused_schedules += 1
                 emit("transport", f"{key}.rounds",
                      f"{ex.rounds_before}->{ex.rounds_after}", "rounds",
                      "fused")
+            if armed.rounds_after < ex.rounds_after:
+                armed_wins += 1
+                emit("transport", f"{key}.rounds_armed",
+                     f"{ex.rounds_after}->{armed.rounds_after}", "rounds",
+                     "topology-armed")
     emit("transport", "fusion.schedules_with_round_cut", fused_schedules)
+    emit("transport", "fusion.schedules_armed_round_cut", armed_wins)
     assert fused_schedules >= 1, (
         "at least one staged multi-pod schedule must lose rounds to fusion")
+    assert armed_wins >= 1, (
+        "the armed pass must cut rounds beyond the topology-free pass "
+        "on at least one staged multi-pod schedule")
     return fusion
 
 
@@ -213,26 +234,32 @@ def payload() -> dict:
 
 
 def check_against(baseline_path: str, data: dict) -> None:
-    """Non-blocking trend check: warn when the sim-exec speedup (the
-    compiled path vs the reference loop, measured on the SAME machine
-    in the same run) dropped more than 2x against the committed
-    baseline's ratio.  The ratio is runner-independent — comparing
-    absolute sub-100ms walltimes against a baseline from a different
-    machine would only track hardware."""
+    """Trend check against the committed baseline.
+
+    The *speedup* comparison stays non-blocking (walltimes are
+    machine-dependent; a >2x ratio drop prints a GitHub ``::warning``
+    and the run continues).  A missing or malformed baseline file, or a
+    baseline without the speedup field, is a CI-wiring bug, not a trend
+    — it exits non-zero (SystemExit) instead of silently passing, so a
+    deleted/corrupted ``BENCH_transport.json`` cannot turn the trend
+    job into a no-op."""
     try:
         with open(baseline_path) as fh:
             base = json.load(fh)
     except (OSError, json.JSONDecodeError) as e:
-        print(f"::warning::BENCH_transport baseline unreadable "
-              f"({baseline_path}: {e}); skipping trend check",
-              file=sys.stderr)
-        return
+        raise SystemExit(
+            f"--check: BENCH_transport baseline unreadable "
+            f"({baseline_path}: {e})")
     old = base.get("sim_exec", {}).get("speedup")
     new = data.get("sim_exec", {}).get("speedup")
-    if not old or not new:
-        print("::warning::BENCH_transport baseline lacks sim_exec speedup",
-              file=sys.stderr)
-        return
+    if not old:
+        raise SystemExit(
+            f"--check: BENCH_transport baseline {baseline_path} lacks "
+            f"sim_exec.speedup (got {old!r})")
+    if not new:
+        raise SystemExit(
+            f"--check: current run's payload lacks sim_exec.speedup "
+            f"(got {new!r}); the baseline {baseline_path} is fine")
     if float(new) * 2.0 < float(old):
         print(f"::warning::sim-exec speedup regressed >2x: "
               f"{new:.2f}x vs baseline {old:.2f}x "

@@ -18,10 +18,13 @@ included) plus the wall time as a JSON document — the CI artifact the
 timing-trend jobs consume.
 
 ``--transport-json PATH`` runs only the persistent-executor transport
-benchmark (fusion round counts, vectorized sim-exec walltime, shardmap
-trace counts — see benchmarks.bench_transport) and writes its JSON;
+benchmark (topology-free AND topology-armed fusion round counts,
+vectorized sim-exec walltime, shardmap trace counts — see
+benchmarks.bench_transport) and writes its JSON;
 ``--check-transport BASELINE`` adds the non-blocking >2x walltime trend
-warning against the committed ``BENCH_transport.json``.
+warning against the committed ``BENCH_transport.json`` — but exits
+non-zero when the baseline file is missing or malformed (a disarmed
+trend job must fail loud, not silently pass).
 """
 from __future__ import annotations
 

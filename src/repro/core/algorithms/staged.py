@@ -177,6 +177,54 @@ def serialized_pod_allgather(topo: Topology) -> CommSchedule:
                         name="allgather.staged_naive")
 
 
+def _bruck_ag_rounds(n: int, members: list[int]) -> list[CommRound]:
+    """Bruck-style allgather inside one rank group: log-step bundled
+    shifts with *growing* message widths (1, 2, 4, ... blocks), blocks
+    stored in-place at their own slot ids.  The width-staggered foil to
+    the equal-width ring sub-stages of ``ag._ring_rounds``."""
+    from repro.core.schedule import make_round
+
+    R = len(members)
+    rounds: list[CommRound] = []
+    d = 1
+    while d < R:
+        cnt = min(d, R - d)
+        edges, send, recv = [], {}, {}
+        for i in range(R):
+            blocks = [members[(i + t) % R] for t in range(cnt)]
+            src, dst = members[i], members[(i - d) % R]
+            edges.append((src, dst))
+            send[src] = blocks
+            recv[dst] = blocks            # land at their own slot ids
+        rounds.append(make_round(n, edges, send, recv))
+        d *= 2
+    return rounds
+
+
+def staggered_pod_allgather(topo: Topology) -> CommSchedule:
+    """Deliberately WIDTH-STAGGERED naive staged allgather: even pods
+    run the equal-width ring stage, odd pods a Bruck log-step stage
+    whose bundles double in width — so the rank-disjoint per-pod
+    stages, serialized back-to-back, can only *partially* re-fuse under
+    the topology-free equal-padded-width rule (the wide Bruck rounds
+    find no equal-width partner).  The cost-model-armed pass
+    (``core.executor._compact_armed``) overlaps them fully via
+    unequal-width whole-round merges priced by ``topo.round_time``.
+    NOT registered: like ``serialized_pod_allgather`` this is a corpus
+    foil, shared by tests/test_executor.py, tests/test_schedule_fuzz.py
+    and benchmarks/bench_transport.py."""
+    n = topo.nranks
+    rounds: list[CommRound] = []
+    for p in range(topo.npods):
+        members = list(topo.pod_ranks(p))
+        if p % 2 == 0:
+            rounds += ag._ring_rounds(n, members, [[r] for r in members])
+        else:
+            rounds += _bruck_ag_rounds(n, members)
+    return CommSchedule(nranks=n, num_slots=n, rounds=tuple(rounds),
+                        name="allgather.staged_staggered")
+
+
 # Registered per family by repro.core.algorithms.REGISTRY (registering
 # here would cycle: this module imports the family modules' sub-stage
 # builders).

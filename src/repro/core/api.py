@@ -73,9 +73,9 @@ def _schedule(collective: str, algorithm: str, topo: Topology):
     sched = REGISTRY[collective][algorithm](topo)
     # warm the persistent-executor cache at plan time (MPI-4 persistent
     # init): by the first traced call the tables are already baked and
-    # the fusion pass has run
+    # the topology-armed fusion/reordering pass has run
     from repro.core import executor
-    executor.get_executor(sched)
+    executor.get_executor(sched, topo=topo)
     return sched
 
 
@@ -164,7 +164,7 @@ def mpix_allgather(x: jax.Array, axis_names, *, algorithm: str = "auto",
     n = topo.nranks
     buf = jnp.zeros((n,) + x.shape, x.dtype)
     buf = buf.at[_flat_rank(names)].set(x)
-    out = ShardMapTransport(n, names).run(sched, buf)
+    out = ShardMapTransport(n, names, topo=topo).run(sched, buf)
     return out.reshape((n * x.shape[0],) + x.shape[1:])
 
 
@@ -179,7 +179,7 @@ def mpix_allreduce(x: jax.Array, axis_names, *, algorithm: str = "auto",
         return jax.lax.psum(x, names)
     n = topo.nranks
     flat = _pad_to(x, n)
-    out = ShardMapTransport(n, names).run(sched, flat.reshape(n, -1))
+    out = ShardMapTransport(n, names, topo=topo).run(sched, flat.reshape(n, -1))
     return out.reshape(-1)[: x.size].reshape(x.shape)
 
 
@@ -202,7 +202,7 @@ def mpix_reduce_scatter(x: jax.Array, axis_names, *,
             f"shape {tuple(x.shape)} must be divisible by nranks={n} "
             f"(one scatter block per rank)")
     blocks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
-    out = ShardMapTransport(n, names).run(sched, blocks)
+    out = ShardMapTransport(n, names, topo=topo).run(sched, blocks)
     return out[_flat_rank(names)]
 
 
@@ -230,7 +230,7 @@ def mpix_alltoall(x: jax.Array, axis_names, *, algorithm: str = "auto",
     if sched.num_blocks > n:  # schedules with a separate recv region
         pad = jnp.zeros((sched.num_blocks - n,) + blocks.shape[1:], x.dtype)
         blocks = jnp.concatenate([blocks, pad], axis=0)
-    out = ShardMapTransport(n, names).run(sched, blocks)
+    out = ShardMapTransport(n, names, topo=topo).run(sched, blocks)
     return out[: sched.result_blocks].reshape(x.shape)
 
 

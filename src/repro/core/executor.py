@@ -25,20 +25,40 @@ The compile pass (all steps skipped with ``optimize=False`` or
      merged round's max-priced time is ``max(a, b)`` — never slower
      under the alpha-beta model.  Reduce rounds are barriers —
      accumulation order is preserved bit-for-bit.
-  3. **Dead-slot elision** — message positions whose scatter target is
+  3. **Topology-armed fusion + reordering** (only with a ``topo=``) —
+     a second compaction over the already-fused rounds, armed with the
+     alpha-beta ``Topology`` cost model.  Per-edge hazard lower bounds
+     form the src/dst interference DAG; rounds are then greedily packed
+     into earlier antichains (concurrent rounds priced by max link
+     time) through two pointwise-cost-safe moves:
+       * whole-round merge into ONE earlier round with *any* widths —
+         the merged round carries ``payload`` so every edge keeps its
+         pre-merge priced width, per-port times are unchanged, and the
+         merged round costs ``max(a, b)`` at every message size;
+       * all-or-nothing multi-target split: every edge of a round
+         migrates to some earlier round — at most one target round (the
+         primary) may raise its max, every other target must already
+         hold an edge whose (alpha, priced-bytes*beta) dominates the
+         arrival — so the total increase is bounded by the deleted
+         round's time at every message size.
+     Both moves are provably never slower than the topology-free pass
+     for every slot size (not just the probed one); see _compact_armed.
+  4. **Dead-slot elision** — message positions whose scatter target is
      ``-1`` (dropped on arrival) and edges that deliver nothing are
      removed from the execution tables (accounting still reads the
      original schedule).
-  4. **Scratch-zero elision** — the per-round scratch-row re-zeroing of
+  5. **Scratch-zero elision** — the per-round scratch-row re-zeroing of
      the historical lowering is dropped: every scratch read is masked,
      so the zeroing was dead work.
-  5. **Baked tables** — per-round index tables are materialized once
-     (numpy for the simulator, device constants for shard_map) instead
-     of per trace.
+  6. **Baked tables + masks** — per-round index tables AND the
+     ``jnp.where`` gather/scatter masks (plus scratch-safe indices) are
+     materialized once (numpy for the simulator, device constants for
+     shard_map) instead of per trace.
 
 Both transports route through here (``transport.SimTransport`` /
 ``ShardMapTransport.run`` are thin lookups).  The executor cache is
-keyed by (schedule fingerprint, optimize flag, validation flag); the
+keyed by (schedule fingerprint, optimize flag, validation flag,
+topology fingerprint) — per-geometry compilations never collide; the
 jit layer above adds (shape, dtype, axis_names) exactly once per
 combination — ``CompiledExec.trace_count`` counts lowerings so tests
 can prove the persistent-collective property: one trace, many steps.
@@ -54,6 +74,7 @@ import jax.numpy as jnp
 
 from repro.core.schedule import (CommRound, CommSchedule, can_fuse,  # noqa: F401 (can_fuse re-exported: executor is its consumer-facing home)
                                  validate_schedules_enabled)
+from repro.core.topology import Topology
 
 
 def optimize_enabled() -> bool:
@@ -73,13 +94,20 @@ def optimize_enabled() -> bool:
 class _Edge:
     """One (src -> dst) message: aligned gather/scatter position vectors
     (position j of the wire payload reads ``gather[j]`` on src and lands
-    at ``scatter[j]`` on dst; -1 gathers send zeros)."""
+    at ``scatter[j]`` on dst; -1 gathers send zeros).
+
+    ``price_slots`` is the slot count the alpha-beta model charges this
+    edge in its *source* round (the round's padded width for dense
+    block tables, the per-source ``payload`` count for ragged rounds)
+    — the topology-armed pass must preserve it through merges so
+    per-port times never move."""
 
     src: int
     dst: int
     gather: np.ndarray           # int, [k_e]
     scatter: np.ndarray          # int, [k_e]; all >= 0 after compression
     has_payload: bool
+    price_slots: int = 0
 
     @property
     def reads(self) -> set:
@@ -100,8 +128,16 @@ def _round_edges(rnd: CommRound, compress: bool) -> list[_Edge]:
             g, t = g[keep], t[keep]
             if not len(t):           # message delivers nothing: elide
                 continue
+        if rnd.payload is not None:
+            # trimming can only drop dead (dropped-on-arrival) wire
+            # slots, so the priced count never grows past the original
+            price = min(int(rnd.payload[s]), int((g >= 0).sum()))
+        else:
+            # dense block tables: the model charges every edge the
+            # round's full padded width (padding ships zeros)
+            price = rnd.k
         out.append(_Edge(int(s), int(d), g, t,
-                         rnd.payload is not None))
+                         rnd.payload is not None, price))
     return out
 
 
@@ -133,6 +169,30 @@ class _Bucket:
         self.dsts.discard(e.dst)
         self.reads.pop(e.src, None)
         self.writes.pop(e.dst, None)
+
+
+def _edge_lo(buckets: list[_Bucket], barrier: int, base_i: int,
+             e: _Edge) -> int:
+    """Earliest bucket in ``[0, base_i)`` that edge ``e`` may legally
+    join — the per-edge hazard lower bound both compaction passes share
+    (their union over a round's edges is the src/dst interference DAG):
+
+      * RAW / WAW — a bucket writing rows ``e`` gathers, or rows ``e``
+        scatters (``e``'s writes must still land last), forces strictly
+        later placement;
+      * WAR — a bucket gathering rows ``e`` scatters allows same-round
+        placement (fused rounds gather before they scatter);
+      * ``barrier`` — nothing crosses the latest reduce round.
+    """
+    lo = barrier
+    for bi in range(base_i):
+        b = buckets[bi]
+        if (b.writes.get(e.src, _EMPTY) & e.reads
+                or b.writes.get(e.dst, _EMPTY) & e.writes):
+            lo = max(lo, bi + 1)          # RAW / WAW
+        elif b.reads.get(e.dst, _EMPTY) & e.writes:
+            lo = max(lo, bi)              # WAR (same-round ok)
+    return lo
 
 
 def _compact(rounds: tuple[CommRound, ...], compress: bool
@@ -183,15 +243,7 @@ def _compact(rounds: tuple[CommRound, ...], compress: bool
         base_i = len(buckets) - 1
         # hazard lower bound: the earliest round this whole round may
         # merge into without reordering a read/write pair
-        lo = barrier
-        for bi in range(base_i):
-            b = buckets[bi]
-            for e in edges:
-                if (b.writes.get(e.src, _EMPTY) & e.reads
-                        or b.writes.get(e.dst, _EMPTY) & e.writes):
-                    lo = max(lo, bi + 1)          # RAW / WAW
-                elif b.reads.get(e.dst, _EMPTY) & e.writes:
-                    lo = max(lo, bi)              # WAR (same-round ok)
+        lo = max(_edge_lo(buckets, barrier, base_i, e) for e in edges)
         width = max(len(e.gather) for e in edges)
         for bi in range(lo, base_i):
             b = buckets[bi]
@@ -212,21 +264,197 @@ def _compact(rounds: tuple[CommRound, ...], compress: bool
 _EMPTY: frozenset = frozenset()
 
 
-def _rebuild_round(bucket: _Bucket, nranks: int) -> CommRound:
+# ---------------------------------------------------------------------------
+# topology-armed compaction (multi-target fusion + antichain packing)
+# ---------------------------------------------------------------------------
+
+
+_REF_SLOT_BYTES = 1024.0     # nominal slot size for greedy *ordering* only
+                             # (acceptance tests below are size-independent)
+
+
+def _edge_link(topo: Topology, e: _Edge):
+    """Link model of the edge's wire hop; None for free on-chip copies."""
+    return None if e.src == e.dst else topo.link(e.src, e.dst)
+
+
+def _edge_nominal_time(topo: Topology, e: _Edge) -> float:
+    lm = _edge_link(topo, e)
+    return 0.0 if lm is None else lm.time(e.price_slots * _REF_SLOT_BYTES)
+
+
+def _has_dominator(topo: Topology, bucket: _Bucket, e: _Edge) -> bool:
+    """True when some edge already in ``bucket`` upper-bounds ``e``'s
+    link time at EVERY slot size: alpha_f >= alpha_e and
+    slots_f*beta_f >= slots_e*beta_e.  Then max-pricing cannot move, so
+    landing ``e`` there is free regardless of message size."""
+    lm_e = _edge_link(topo, e)
+    if lm_e is None:
+        return True                      # on-chip copy: costs nothing
+    load_e = e.price_slots * lm_e.beta
+    for f in bucket.edges:
+        lm_f = _edge_link(topo, f)
+        if lm_f is None:
+            continue
+        if lm_f.alpha >= lm_e.alpha and f.price_slots * lm_f.beta >= load_e:
+            return True
+    return False
+
+
+def _intra_round_hazard(edges: list[_Edge]) -> bool:
+    """True when one edge of a round scatters rows another edge of the
+    SAME round gathers (on one rank).  In-round semantics read pre-round
+    state, so such edges may only ever execute concurrently — splitting
+    them across different rounds would reorder the write before the
+    read.  Rounds with this shape are merge-whole-or-stay."""
+    for e1 in edges:
+        for e2 in edges:
+            if e1 is not e2 and e1.dst == e2.src and e1.writes & e2.reads:
+                return True
+    return False
+
+
+def _compact_armed(rounds: tuple[CommRound, ...], topo: Topology,
+                   compress: bool) -> tuple[list[_Bucket], int, int]:
+    """Cost-model-armed compaction (run AFTER the topology-free pass).
+
+    The per-edge hazard lower bounds below are exactly the src/dst
+    interference DAG of ``can_fuse``-style legality (reduce rounds are
+    barriers; RAW/WAW force strictly-later placement; WAR allows
+    same-round placement because fused rounds gather before they
+    scatter).  Rounds are processed in order and greedily packed into
+    the earliest legal antichain — an existing concurrent round priced
+    by the max over its links — via two moves, each *pointwise*
+    cost-safe (no slower at ANY slot size, not merely at a probe size;
+    this is what makes running the armed pass on top of the topology-
+    free pass provably never worse than that pass):
+
+      * **whole-round merge** (subsumes the equal-width single-target
+        rule): all edges of round j land in one earlier bucket c.
+        Legality makes src/dst sets disjoint, and every rank sends at
+        most once per round, so each (src, level) injection port
+        carries exactly one message — ports of c and j never collide
+        and the merged round's time is max(c, j) <= c + j for every
+        slot size.  Unequal widths are priced exactly by carrying each
+        edge's original width through ``payload`` (see _rebuild_round).
+      * **all-or-nothing multi-target split**: every edge of round j
+        migrates to SOME earlier bucket; at most one receiving bucket
+        (the primary) may raise its max — its increase is bounded by
+        round j's own time — and every other receiving bucket must
+        already hold a dominating edge (``_has_dominator``), leaving
+        its max untouched at every size.  Deleting round j then pays
+        for the primary's bounded increase: total time never rises.
+        Partial migrations are rolled back whole (the PR 4 lesson:
+        redistributing edges without deleting a round only inflates
+        other rounds' maxima).
+
+    Returns (buckets, whole-round merges, edges moved by splits).
+    """
+    buckets: list[_Bucket] = []
+    barrier = 0
+    merged_rounds = 0
+    split_edges = 0
+    for rnd in rounds:
+        edges = _round_edges(rnd, compress)
+        base = _Bucket(rnd.reduce)
+        buckets.append(base)
+        for e in edges:
+            base.add(e)
+        if rnd.reduce:
+            barrier = len(buckets)
+            continue
+        if not edges:
+            continue
+        base_i = len(buckets) - 1
+        # -- move 1: whole-round merge, any widths ----------------------
+        lo_all = max(_edge_lo(buckets, barrier, base_i, e) for e in edges)
+        merged = False
+        for bi in range(lo_all, base_i):
+            b = buckets[bi]
+            if b.reduce or not b.edges:
+                continue
+            if any(e.src in b.srcs or e.dst in b.dsts for e in edges):
+                continue
+            for e in edges:
+                base.remove(e)
+                b.add(e)
+            merged_rounds += 1
+            merged = True
+            break
+        if merged:
+            continue
+        # -- move 2: all-or-nothing multi-target split ------------------
+        if len(edges) < 2 or _intra_round_hazard(edges):
+            continue
+        placed: list[tuple[_Edge, _Bucket]] = []
+        primary: _Bucket | None = None
+        ok = True
+        # heaviest edges first: the critical edge claims the primary
+        # slot, lighter edges then only need dominated (free) homes
+        for e in sorted(edges, key=lambda e: -_edge_nominal_time(topo, e)):
+            # recomputed per edge: siblings already placed count
+            lo = _edge_lo(buckets, barrier, base_i, e)
+            home = None
+            fallback = None
+            for bi in range(lo, base_i):
+                b = buckets[bi]
+                if b.reduce or not b.edges:
+                    continue
+                if e.src in b.srcs or e.dst in b.dsts:
+                    continue
+                if b is primary or _has_dominator(topo, b, e):
+                    home = b
+                    break
+                if fallback is None:
+                    fallback = b
+            if home is None and primary is None and fallback is not None:
+                home = primary = fallback
+            if home is None:
+                ok = False
+                break
+            base.remove(e)
+            home.add(e)
+            placed.append((e, home))
+        if ok:
+            split_edges += len(placed)
+        else:                              # roll the whole round back
+            for e, b in placed:
+                b.remove(e)
+                base.add(e)
+    return [b for b in buckets if b.edges], merged_rounds, split_edges
+
+
+def _rebuild_round(bucket: _Bucket, nranks: int, *,
+                   priced: bool = False) -> CommRound:
+    """Materialize a bucket as a CommRound.
+
+    With ``priced=True`` (the topology-armed pass) a round whose edges
+    carry unequal priced widths gets a ``payload`` so ``modeled_time``
+    keeps charging every edge its pre-merge width — unequal-width
+    merges must not let padding reprice (or silently discount) edges.
+    """
     k = max((len(e.gather) for e in bucket.edges), default=0)
     k = max(k, 1)
     gi = np.full((nranks, k), -1, np.int64)
     si = np.full((nranks, k), -1, np.int64)
     perm = []
     payload = None
-    if any(e.has_payload for e in bucket.edges):
+    if any(e.has_payload for e in bucket.edges) or (
+            priced and any(e.price_slots != k for e in bucket.edges)):
         payload = np.zeros(nranks, np.int64)
     for e in bucket.edges:
         perm.append((e.src, e.dst))
         gi[e.src, : len(e.gather)] = e.gather
         si[e.dst, : len(e.scatter)] = e.scatter
         if payload is not None:
-            payload[e.src] = int((e.gather >= 0).sum())
+            # priced (armed) rebuilds carry each edge's pre-merge width
+            # verbatim; the historical rebuild recomputes the live
+            # count but clamps by the original priced width — a fuzzed
+            # round whose payload undercuts its live gather count must
+            # not get silently repriced upward
+            payload[e.src] = (e.price_slots if priced
+                              else min(e.price_slots,
+                                       int((e.gather >= 0).sum())))
     return CommRound(perm=tuple(perm), gather_idx=gi, scatter_idx=si,
                      reduce=bucket.reduce, payload=payload)
 
@@ -289,6 +517,7 @@ class _ExecRound:
         self.perm = rnd.perm
         self.reduce = rnd.reduce
         self.k = rnd.k
+        self.num_slots = num_slots
         self.gather_idx = np.asarray(rnd.gather_idx, np.int32)
         self.scatter_idx = np.asarray(rnd.scatter_idx, np.int32)
         # vectorized-sim tables: one fancy-indexed gather/permute/scatter
@@ -309,21 +538,42 @@ class _ExecRound:
         self._jnp = None
 
     def jnp_tables(self):
-        """Device-resident gather/scatter tables, materialized once and
-        reused by every subsequent trace (persistent-collective style).
-        ``ensure_compile_time_eval`` makes them concrete arrays even when
-        first touched from inside a jit/shard_map trace — caching a
-        tracer would leak it into later traces."""
+        """Device-resident gather/scatter tables AND their ``jnp.where``
+        masks, materialized once and reused by every subsequent trace
+        (persistent-collective style).  The scratch-safe indices
+        (``-1 -> num_slots``) and the validity masks are precomputed
+        here as device constants instead of being rebuilt from
+        ``table >= 0`` comparisons inside every lowering.
+        ``ensure_compile_time_eval`` makes them concrete arrays even
+        when first touched from inside a jit/shard_map trace — caching
+        a tracer would leak it into later traces.
+        Returns (gather_safe, gather_mask, scatter_safe, scatter_mask).
+        """
         if self._jnp is None:
             import jax
+            nb = self.num_slots
             with jax.ensure_compile_time_eval():
-                self._jnp = (jnp.asarray(self.gather_idx),
-                             jnp.asarray(self.scatter_idx))
+                self._jnp = (
+                    jnp.asarray(np.where(self.gather_idx >= 0,
+                                         self.gather_idx, nb), np.int32),
+                    jnp.asarray(self.gather_idx >= 0),
+                    jnp.asarray(np.where(self.scatter_idx >= 0,
+                                         self.scatter_idx, nb), np.int32),
+                    jnp.asarray(self.scatter_idx >= 0),
+                )
         return self._jnp
 
 
 class CompiledExec:
     """A ``CommSchedule`` lowered for repeated execution.
+
+    With a ``topo`` the compile pass is *armed* with the alpha-beta
+    cost model: after the topology-free fusion, ``_compact_armed``
+    multi-target-fuses and reorders the surviving rounds (each move
+    pointwise cost-safe, so the armed result is never slower than the
+    topology-free pass at any message size — the topology-free result
+    is the armed pass's input and its fallback: when no armed move
+    applies, the rounds pass through bit-identical).
 
     ``run_sim`` / ``run_shardmap`` are the two backends' steady-state
     entry points; both execute the *same* compiled rounds, so the
@@ -333,14 +583,18 @@ class CompiledExec:
     ``sim_runs`` (simulator executions).
     """
 
-    def __init__(self, schedule: CommSchedule, optimize: bool):
+    def __init__(self, schedule: CommSchedule, optimize: bool,
+                 topo: Topology | None = None):
         self.schedule = schedule
         self.optimize = optimize
+        self.topo = topo
         self.nranks = schedule.nranks
         self.num_slots = schedule.num_slots
         self.rounds_before = schedule.num_rounds
         self.trace_count = 0
         self.sim_runs = 0
+        self.armed_merged_rounds = 0
+        self.armed_split_edges = 0
         if optimize:
             rounds, post, self.pre_folded = _fold_pre(schedule)
             folded = CommSchedule(
@@ -354,12 +608,24 @@ class CompiledExec:
                                                     compress=True)
             compiled_rounds = tuple(_rebuild_round(b, self.nranks)
                                     for b in buckets)
+            self.rounds_after_unarmed = len(compiled_rounds)
+            if topo is not None:
+                # armed pass runs ON the topology-free output, so every
+                # pointwise-safe move keeps it <= that pass, which is
+                # itself <= the unoptimized schedule
+                (abuckets, self.armed_merged_rounds,
+                 self.armed_split_edges) = _compact_armed(
+                     compiled_rounds, topo, compress=True)
+                compiled_rounds = tuple(
+                    _rebuild_round(b, self.nranks, priced=True)
+                    for b in abuckets)
             self.local_pre = folded.local_pre
             self.local_post = post
         else:
             self.pre_folded = False
             self.migrated_edges = 0
             compiled_rounds = schedule.rounds
+            self.rounds_after_unarmed = len(compiled_rounds)
             self.local_pre = schedule.local_pre
             self.local_post = schedule.local_post
         self.compiled_schedule = CommSchedule(
@@ -442,21 +708,20 @@ class CompiledExec:
         import jax
 
         kdims = (rnd.k,) + (1,) * (x.ndim - 1)
-        gather_tbl, scatter_tbl = rnd.jnp_tables()
-        my_gather = gather_tbl[rank]                          # [k]
-        my_scatter = scatter_tbl[rank]
+        # safe indices and where-masks are baked device constants
+        # (jnp_tables): no per-trace `>= 0` comparisons or -1 clamping
+        g_safe, g_mask, t_safe, t_mask = rnd.jnp_tables()
         # Gather payload; -1 slots read the scratch row and are zeroed.
-        payload = x[jnp.where(my_gather >= 0, my_gather, nb)]
-        payload = jnp.where((my_gather >= 0).reshape(kdims), payload, 0)
+        payload = x[g_safe[rank]]
+        payload = jnp.where(g_mask[rank].reshape(kdims), payload, 0)
         recvd = jax.lax.ppermute(payload, axis_arg, list(rnd.perm))
         # Scatter: -1 slots land on the scratch row (index nb).
-        tgt = jnp.where(my_scatter >= 0, my_scatter, nb)
         if rnd.reduce:
-            masked = jnp.where((my_scatter >= 0).reshape(kdims), recvd, 0)
-            x = x.at[tgt].add(masked)
+            masked = jnp.where(t_mask[rank].reshape(kdims), recvd, 0)
+            x = x.at[t_safe[rank]].add(masked)
         else:
             # distinct targets per slot by construction (schedule invariant)
-            x = x.at[tgt].set(recvd)
+            x = x.at[t_safe[rank]].set(recvd)
             if not self.optimize:
                 # historical lowering re-zeroed the scratch row; the
                 # compiled path elides it (every scratch read is masked)
@@ -469,9 +734,14 @@ class CompiledExec:
             "name": self.schedule.name,
             "fingerprint": self.schedule.fingerprint(),
             "optimize": self.optimize,
+            "topology": (None if self.topo is None
+                         else self.topo.fingerprint()),
             "rounds_before": self.rounds_before,
+            "rounds_after_unarmed": self.rounds_after_unarmed,
             "rounds_after": self.rounds_after,
             "migrated_edges": self.migrated_edges,
+            "armed_merged_rounds": self.armed_merged_rounds,
+            "armed_split_edges": self.armed_split_edges,
             "pre_folded": self.pre_folded,
             "trace_count": self.trace_count,
             "sim_runs": self.sim_runs,
@@ -488,35 +758,46 @@ _HITS = {"hits": 0, "misses": 0}
 
 
 def compile_schedule(schedule: CommSchedule, *,
-                     optimize: bool | None = None) -> CompiledExec:
+                     optimize: bool | None = None,
+                     topo: Topology | None = None) -> CompiledExec:
     """Lower ``schedule`` to a fresh ``CompiledExec`` (uncached entry;
-    use ``get_executor`` for the shared process-level cache)."""
+    use ``get_executor`` for the shared process-level cache).  With a
+    ``topo`` the optimization pass is armed with its alpha-beta cost
+    model (multi-target fusion + round reordering); without one, only
+    the topology-free single-target whole-round rule runs."""
     if optimize is None:
         optimize = optimize_enabled()
-    return CompiledExec(schedule, bool(optimize))
+    return CompiledExec(schedule, bool(optimize), topo)
 
 
 def get_executor(schedule: CommSchedule, *,
-                 optimize: bool | None = None) -> CompiledExec:
+                 optimize: bool | None = None,
+                 topo: Topology | None = None) -> CompiledExec:
     """The persistent-init entry: compile once per (schedule content,
-    optimize flag, validation flag), then reuse forever.
+    optimize flag, validation flag, topology geometry), then reuse
+    forever.
 
     Keyed by ``CommSchedule.fingerprint()`` — two independently built
     schedules with identical tables share one executor (and its baked
     device tables and jit traces).  ``REPRO_VALIDATE_SCHEDULES`` is part
     of the key because the compiled rounds are themselves CommRounds:
     flipping validation on must not hand back tables built unchecked.
+    The topology's geometry-bearing ``fingerprint()`` joins the key so
+    per-geometry armed compilations never collide — the same schedule
+    compiled for two link geometries (or with no topology at all) gets
+    distinct executors with identical numerics.
     """
     if optimize is None:
         optimize = optimize_enabled()
     key = (schedule.fingerprint(), bool(optimize),
-           validate_schedules_enabled())
+           validate_schedules_enabled(),
+           None if topo is None else topo.fingerprint())
     ex = _CACHE.get(key)
     if ex is not None:
         _HITS["hits"] += 1
         return ex
     _HITS["misses"] += 1
-    ex = CompiledExec(schedule, bool(optimize))
+    ex = CompiledExec(schedule, bool(optimize), topo)
     _CACHE[key] = ex
     return ex
 

@@ -153,13 +153,15 @@ class NeighborPlan:
 
     @property
     def num_compiled_rounds(self) -> int:
-        """Round count after persistent-executor compilation.  The
-        greedy edge coloring already packs rounds tightly, so this
-        usually equals ``num_rounds`` — the executor's drain pass only
-        deletes a round when every one of its edges legally overlaps
-        earlier rounds (and never redistributes edges otherwise)."""
+        """Round count after persistent-executor compilation, armed
+        with this plan's topology.  The greedy edge coloring already
+        packs rounds tightly, so the topology-free drain pass usually
+        leaves the count unchanged; the cost-model-armed pass can
+        additionally delete a round by splitting its edges across
+        earlier rounds when ``topo.round_time`` proves it free."""
         from repro.core import executor
-        return executor.get_executor(self.schedule).rounds_after
+        return executor.get_executor(self.schedule,
+                                     topo=self.topo).rounds_after
 
     # -- accounting (paper claim: aggregation cuts DCN bytes/messages) ----
     def traffic(self, elem_bytes: int = 1) -> dict:
@@ -432,7 +434,7 @@ def run_sim(plan: NeighborPlan, values: Sequence[np.ndarray]) -> list[np.ndarray
     buf = np.zeros((n, plan.buf_rows) + feat, values[0].dtype)
     for r in range(n):
         buf[r, : values[r].shape[0]] = values[r]
-    out = SimTransport(n).run(plan.schedule, buf)
+    out = SimTransport(n, topo=plan.topo).run(plan.schedule, buf)
     return [out[r, plan.recv_offsets[r]: plan.recv_offsets[r]
                 + plan.recv_sizes[r]] for r in range(n)]
 
@@ -451,7 +453,7 @@ def run_shardmap(plan: NeighborPlan, local_values: jax.Array,
     feat = local_values.shape[1:]
     buf = jnp.zeros((plan.buf_rows,) + feat, local_values.dtype)
     buf = buf.at[: local_values.shape[0]].set(local_values)
-    out = ShardMapTransport(n, names).run(plan.schedule, buf)
+    out = ShardMapTransport(n, names, topo=plan.topo).run(plan.schedule, buf)
     n_recv_max = max(plan.recv_sizes)
     offs = jnp.asarray(plan.recv_offsets)[_flat_rank(names)]
     return jax.lax.dynamic_slice_in_dim(out, offs, n_recv_max, axis=0)

@@ -128,13 +128,15 @@ def select_neighbor(graph, topo: Topology, *, policy: str | None = None,
 
 def _executed_time(sched, topo: Topology, nbytes: int) -> float:
     """alpha-beta time of what would actually run: the *compiled*
-    schedule (post executor fusion), matching ``tuner._modeled`` so the
-    model policy and the tuned tables price the same rounds."""
+    schedule (post executor fusion, cost-model-armed with ``topo`` —
+    the same executor the mpix_* transports look up), matching
+    ``tuner._modeled`` so the model policy and the tuned tables price
+    the same rounds."""
     from repro.core import executor  # local: avoid import cycle
 
     block_nbytes = max(1, nbytes // max(1, sched.num_blocks))
-    return executor.get_executor(sched).compiled_schedule.modeled_time(
-        topo, block_nbytes)
+    return executor.get_executor(
+        sched, topo=topo).compiled_schedule.modeled_time(topo, block_nbytes)
 
 
 @functools.lru_cache(maxsize=None)

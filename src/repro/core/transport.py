@@ -42,14 +42,23 @@ import jax.numpy as jnp
 
 from repro.core import executor
 from repro.core.schedule import CommRound, CommSchedule
+from repro.core.topology import Topology
 
 from repro import compat
 
 
 class Transport(abc.ABC):
-    """Executes schedules for a fixed rank count."""
+    """Executes schedules for a fixed rank count.
+
+    An optional ``topo`` arms the persistent-executor compile pass with
+    the alpha-beta cost model (multi-target fusion + round reordering,
+    see core.executor); without one the topology-free single-target
+    rule runs.  The executor cache keys on the topology fingerprint, so
+    one transport per geometry never collides with another.
+    """
 
     nranks: int
+    topo: Topology | None
 
     @abc.abstractmethod
     def run(self, schedule: CommSchedule, buf):
@@ -72,8 +81,9 @@ class SimTransport(Transport):
       * (r, r) self-pairs deliver the rank's own payload (on-chip copy).
     """
 
-    def __init__(self, nranks: int):
+    def __init__(self, nranks: int, topo: Topology | None = None):
         self.nranks = nranks
+        self.topo = topo
 
     def run(self, schedule: CommSchedule, buf: np.ndarray) -> np.ndarray:
         """Compiled-path execution: one vectorized gather/permute/scatter
@@ -82,7 +92,7 @@ class SimTransport(Transport):
         bit-exactness sweeps fast)."""
         assert buf.shape[0] == self.nranks, (buf.shape, self.nranks)
         assert buf.shape[1] == schedule.num_slots
-        return executor.get_executor(schedule).run_sim(buf)
+        return executor.get_executor(schedule, topo=self.topo).run_sim(buf)
 
     def run_reference(self, schedule: CommSchedule,
                       buf: np.ndarray) -> np.ndarray:
@@ -151,20 +161,23 @@ class ShardMapTransport(Transport):
     internally.
     """
 
-    def __init__(self, nranks: int, axis_names: Sequence[str] | str):
+    def __init__(self, nranks: int, axis_names: Sequence[str] | str,
+                 topo: Topology | None = None):
         self.nranks = nranks
+        self.topo = topo
         self.axis_names = ((axis_names,) if isinstance(axis_names, str)
                            else tuple(axis_names))
 
     def run(self, schedule: CommSchedule, buf: jax.Array) -> jax.Array:
         """Compiled-path execution: look up the cached ``CompiledExec``
-        (tables already on device, rounds fused) and trace its rounds.
-        The executor's trace counter makes the persistence observable:
+        (tables already on device, rounds fused — cost-model-armed when
+        this transport carries a topology) and trace its rounds.  The
+        executor's trace counter makes the persistence observable:
         repeated jitted calls with one (shape, dtype) lower exactly
         once."""
         assert buf.shape[0] == schedule.num_slots
         rank = _flat_rank(self.axis_names)
-        return executor.get_executor(schedule).run_shardmap(
+        return executor.get_executor(schedule, topo=self.topo).run_shardmap(
             buf, rank, self._axis_arg())
 
     def _axis_arg(self):

@@ -233,13 +233,14 @@ def _measure(collective: str, algorithm: str, topo: Topology, nbytes: int,
 
 def _modeled(sched, topo: Topology, nbytes: int) -> float:
     """alpha-beta model of what would actually execute: the *compiled*
-    schedule (post fusion), so model-source tables reward the same
-    round-count cuts the measured path enjoys."""
+    schedule (post fusion, cost-model-armed with ``topo``), so
+    model-source tables reward the same round-count cuts the measured
+    path enjoys."""
     from repro.core import executor
 
     block = max(1, nbytes // max(1, sched.num_blocks))
-    return executor.get_executor(sched).compiled_schedule.modeled_time(
-        topo, block)
+    return executor.get_executor(
+        sched, topo=topo).compiled_schedule.modeled_time(topo, block)
 
 
 def _candidates(collective: str, topo: Topology) -> dict:
@@ -255,13 +256,14 @@ def _candidates(collective: str, topo: Topology) -> dict:
     return out
 
 
-def _compiled_rounds(sched) -> dict:
-    """Round counts through the persistent-executor compile pass —
-    recorded next to every timing so the table shows *what executed*
-    (measurements run through the compiled path)."""
+def _compiled_rounds(sched, topo: Topology | None = None) -> dict:
+    """Round counts through the persistent-executor compile pass
+    (topology-armed when ``topo`` is given, matching the executor the
+    measurement path looks up) — recorded next to every timing so the
+    table shows *what executed*."""
     from repro.core import executor
 
-    ex = executor.get_executor(sched)
+    ex = executor.get_executor(sched, topo=topo)
     return {"before": ex.rounds_before, "after": ex.rounds_after}
 
 
@@ -277,7 +279,7 @@ def _time_cell(collective: str, candidates: dict, topo: Topology,
                                    repeats)
         else:
             times[name] = _modeled(sched, topo, int(nbytes))
-        rounds[name] = _compiled_rounds(sched)
+        rounds[name] = _compiled_rounds(sched, topo)
     if measured and include_xla:
         # the substrate's own lowering — MPI Advance's "system MPI"
         times["xla"] = _measure(collective, "xla", topo, int(nbytes),
@@ -310,7 +312,7 @@ def measure_schedule(schedule, topo: Topology, *, slot_elems: int = 1,
     if jax.device_count() < n:
         raise RuntimeError(f"need {n} devices, have {jax.device_count()}")
     mesh = compat.make_mesh((n,), (_AXIS,), devices=jax.devices()[:n])
-    transport = ShardMapTransport(n, _AXIS)
+    transport = ShardMapTransport(n, _AXIS, topo=topo)
     f = jax.jit(compat.shard_map(
         lambda b: transport.run(schedule, b), mesh=mesh,
         in_specs=P(_AXIS), out_specs=P(_AXIS), check_vma=False))
@@ -336,8 +338,9 @@ def schedule_time(schedule, topo: Topology, *, slot_nbytes: int,
             schedule, topo, slot_elems=max(1, slot_nbytes // _ELEM),
             repeats=repeats)
     from repro.core import executor
-    return executor.get_executor(schedule).compiled_schedule.modeled_time(
-        topo, slot_nbytes)
+    return executor.get_executor(
+        schedule, topo=topo).compiled_schedule.modeled_time(
+            topo, slot_nbytes)
 
 
 def tune(topo: Topology, *, collectives=COLLECTIVES, sizes=DEFAULT_SIZES,
@@ -414,7 +417,7 @@ def tune_neighbor(topo: Topology, *, sizes=DEFAULT_SIZES, repeats: int = 3,
             "best": min(times, key=times.get),
             "nbytes": total_rows * slot_nbytes,
             "times": {k: float(v) for k, v in times.items()},
-            "rounds": {mode: _compiled_rounds(plan.schedule)
+            "rounds": {mode: _compiled_rounds(plan.schedule, topo)
                        for mode, plan in plans.items()},
         }
     return per
@@ -437,7 +440,7 @@ def tune_partitioned(topo: Topology, *, sizes=DEFAULT_SIZES,
             times[name] = schedule_time(
                 sched, topo, slot_nbytes=slot_nbytes, repeats=repeats,
                 force_model=force_model)
-            rounds[name] = _compiled_rounds(sched)
+            rounds[name] = _compiled_rounds(sched, topo)
         per[str(size_bucket(int(nbytes)))] = {
             "best": min(times, key=times.get),
             "nbytes": int(nbytes),

@@ -68,8 +68,40 @@ assert ex.trace_count == 3, ex.trace_count
 print(f"trace counts ok: 9 calls -> {ex.trace_count} traces "
       f"(1 per shape/dtype)")
 
+# --- 1b. topology-armed executor: baked where-masks add no retraces --------
+# the armed compilation bakes scratch-safe indices AND jnp.where masks
+# as device constants (executor._ExecRound.jnp_tables); repeated jitted
+# calls of the armed executor must still lower exactly once, and the
+# armed executor is a distinct cache entry from the topology-free one
+topo2 = Topology(8, 4)
+ex_armed = executor.get_executor(sched, topo=topo2)
+assert ex_armed is not ex, "topology must key a distinct cache entry"
+assert executor.get_executor(sched, topo=topo2) is ex_armed
+tr_armed = ShardMapTransport(N, ("data",), topo=topo2)
+fa = jax.jit(compat.shard_map(
+    lambda b: tr_armed.run(sched, b), mesh=mesh,
+    in_specs=P("data"), out_specs=P("data"), check_vma=False))
+with compat.set_mesh(mesh):
+    for _ in range(5):
+        jax.block_until_ready(fa(x32))
+assert ex_armed.trace_count == 1, (
+    f"baked masks must not retrace: 5 calls -> {ex_armed.trace_count}")
+want = SimTransport(N).run_reference(
+    sched, x32.reshape(N, sched.num_slots, 4))
+with compat.set_mesh(mesh):
+    got = np.asarray(fa(x32))
+assert np.array_equal(want.reshape(got.shape), got)
+# the mask/index device constants are materialized once and reused
+tables0 = [r.jnp_tables() for r in ex_armed._rounds]
+tables1 = [r.jnp_tables() for r in ex_armed._rounds]
+assert all(a is b for ta, tb in zip(tables0, tables1)
+           for a, b in zip(ta, tb)), "jnp tables/masks must bake once"
+print(f"armed executor: 5 calls -> {ex_armed.trace_count} trace, "
+      f"distinct cache entry, masks baked once, bit-exact")
+
 # --- 2. the mpix_* API path shares the executor cache ----------------------
-traces_before_api = ex.trace_count
+# the api path arms the executor with its own (flat, from the mesh
+# axes) topology — one cache entry per geometry, reused across calls
 g = jax.jit(compat.shard_map(
     lambda v: api.mpix_allgather(v, "data", algorithm="ring"),
     mesh=mesh, in_specs=P("data"), out_specs=P(None), check_vma=False))
@@ -78,14 +110,16 @@ with compat.set_mesh(mesh):
     for _ in range(3):
         jax.block_until_ready(g(xs))
 stats = executor.cache_stats()
+flat_fp = topo.fingerprint()
 ring_execs = [e for e in stats["executors"]
-              if e["name"] == "allgather.ring" and e["optimize"]]
+              if e["name"] == "allgather.ring" and e["optimize"]
+              and e["topology"] == flat_fp]
 assert len(ring_execs) == 1, (
-    f"api path must reuse the one cached allgather.ring executor, "
-    f"found {len(ring_execs)}")
-assert ring_execs[0]["trace_count"] == traces_before_api + 1, ring_execs
-print(f"api path shares executor: cache size {stats['size']}, "
-      f"hits {stats['hits']}")
+    f"api path must reuse one cached flat-armed allgather.ring "
+    f"executor, found {len(ring_execs)}")
+assert ring_execs[0]["trace_count"] == 1, ring_execs
+print(f"api path shares per-geometry executor: cache size "
+      f"{stats['size']}, hits {stats['hits']}")
 
 # --- 3. fused lowering bit-exact where fusion cuts rounds ------------------
 # a multi-pod staged schedule with serialized per-pod stages (what a

@@ -1,0 +1,69 @@
+"""Regression tests for ``benchmarks.run --check-transport`` semantics.
+
+The walltime *trend* comparison is non-blocking by design (machine-
+dependent), but a missing or malformed baseline file must exit non-zero
+— historically ``check_against`` printed a warning and returned, so a
+deleted or corrupted ``BENCH_transport.json`` silently disarmed the CI
+trend job.
+"""
+import json
+import os
+import sys
+from pathlib import Path
+
+import pytest
+
+# benchmarks/ is a plain directory (not installed); import like run.py does
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+# bench_transport forces an 8-host-device XLA flag at import (for its
+# own CLI use); the main pytest process must keep its device count, so
+# snapshot and restore the env around the import
+_keep_flags = os.environ.get("XLA_FLAGS")
+from benchmarks import bench_transport  # noqa: E402
+
+if _keep_flags is None:
+    os.environ.pop("XLA_FLAGS", None)
+else:
+    os.environ["XLA_FLAGS"] = _keep_flags
+
+
+GOOD_DATA = {"sim_exec": {"speedup": 8.0, "compiled_total_s": 0.1}}
+
+
+def test_check_missing_baseline_exits_nonzero(tmp_path):
+    with pytest.raises(SystemExit):
+        bench_transport.check_against(str(tmp_path / "nope.json"), GOOD_DATA)
+
+
+def test_check_malformed_baseline_exits_nonzero(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    with pytest.raises(SystemExit):
+        bench_transport.check_against(str(bad), GOOD_DATA)
+
+
+def test_check_baseline_without_speedup_exits_nonzero(tmp_path):
+    empty = tmp_path / "empty.json"
+    empty.write_text(json.dumps({"sim_exec": {}}))
+    with pytest.raises(SystemExit):
+        bench_transport.check_against(str(empty), GOOD_DATA)
+
+
+def test_check_good_baseline_passes_and_regression_warns(tmp_path, capsys):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"sim_exec": {"speedup": 8.0}}))
+    # within 2x: no exception, no warning
+    bench_transport.check_against(str(base), GOOD_DATA)
+    assert "::warning" not in capsys.readouterr().err
+    # >2x ratio drop: still non-blocking, but the ::warning is printed
+    slow = {"sim_exec": {"speedup": 3.0, "compiled_total_s": 0.5}}
+    bench_transport.check_against(str(base), slow)
+    assert "::warning" in capsys.readouterr().err
+
+
+def test_committed_baseline_is_readable():
+    """The committed BENCH_transport.json must satisfy the checker's
+    schema (otherwise every CI run would now fail the trend step)."""
+    committed = Path(__file__).resolve().parents[1] / "BENCH_transport.json"
+    bench_transport.check_against(str(committed), GOOD_DATA)

@@ -244,6 +244,54 @@ def test_fusion_never_worsens_modeled_time():
     assert plan.num_compiled_rounds == plan.num_rounds
 
 
+def test_armed_corpus_never_worse_than_topology_free():
+    """Acceptance invariant of the cost-model-armed pass: over the full
+    registry x {flat, 2-pod, 3-level} corpus the armed compilation's
+    modeled time is <= the topology-free pass AND <= the unoptimized
+    schedule at alpha-dominated, mixed, and beta-dominated slot sizes —
+    with bit-exact execution."""
+    rng = np.random.default_rng(2)
+    for topo in TOPOS.values():
+        tr = SimTransport(topo.nranks)
+        for label, sched in _all_schedules(topo):
+            armed = executor.get_executor(sched, topo=topo)
+            free = executor.get_executor(sched)
+            buf = rng.integers(-8, 8, (topo.nranks, sched.num_slots, 2)
+                               ).astype(np.float32)
+            assert np.array_equal(tr.run_reference(sched, buf),
+                                  armed.run_sim(buf)), label
+            for s in (1, 4096, 1 << 20):
+                t_orig = sched.modeled_time(topo, s)
+                t_free = free.compiled_schedule.modeled_time(topo, s)
+                t_armed = armed.compiled_schedule.modeled_time(topo, s)
+                assert t_armed <= t_free * 1.0001, (label, s)
+                assert t_armed <= t_orig * 1.0001, (label, s)
+
+
+def test_armed_fuses_staggered_multipod_stages():
+    """The width-staggered serialized staged allgather: the topology-
+    free equal-width rule can only partially re-fuse it; the armed pass
+    overlaps the wide Bruck rounds with the ring rounds (unequal-width
+    whole-round merges) — strictly fewer rounds, strictly lower modeled
+    time, bit-exact."""
+    from repro.core.algorithms.staged import staggered_pod_allgather
+
+    topo = Topology(8, 4)
+    sched = staggered_pod_allgather(topo)
+    free = executor.get_executor(sched)
+    armed = executor.get_executor(sched, topo=topo)
+    assert sched.num_rounds == 5          # 3 ring + 2 bruck rounds
+    assert free.rounds_after == 4         # only the w=1 bruck round fuses
+    assert armed.rounds_after == 3        # w=2 bruck round overlaps too
+    assert armed.armed_merged_rounds >= 1
+    assert (armed.compiled_schedule.modeled_time(topo, 4096)
+            < free.compiled_schedule.modeled_time(topo, 4096))
+    rng = np.random.default_rng(4)
+    buf = rng.integers(-8, 8, (8, 8, 2)).astype(np.float32)
+    tr = SimTransport(8)
+    assert np.array_equal(tr.run_reference(sched, buf), armed.run_sim(buf))
+
+
 def test_duplicate_reduce_targets_accumulate_like_reference(monkeypatch):
     """With validation off, a reduce round may carry duplicate live
     scatter targets; the vectorized path must fall back to unbuffered
@@ -339,6 +387,55 @@ def test_cache_invalidated_by_validation_flag(monkeypatch):
     assert ex_on is not ex_off
     monkeypatch.setenv("REPRO_VALIDATE_SCHEDULES", "1")
     assert executor.get_executor(sched) is ex_on
+
+
+@settings(max_examples=20, deadline=None)
+@given(pair=st.sampled_from([("flat", "2pod"), ("flat", "3lvl"),
+                             ("2pod", "3lvl")]),
+       algo=st.sampled_from(["ring", "bruck"]))
+def test_cache_keyed_by_topology_distinct_entries_same_numerics(pair, algo):
+    """Two distinct topologies compiling the SAME schedule content must
+    occupy distinct cache entries (per-geometry armed compilations
+    never collide) — and topology-armed vs topology-free likewise —
+    while every entry stays bit-identical to the oracle."""
+    executor.clear_cache()
+    a_name, b_name = pair
+    topo_a, topo_b = TOPOS[a_name], TOPOS[b_name]
+    sched = REGISTRY["allgather"][algo](flat_topology(8))
+    ex_none = executor.get_executor(sched)
+    ex_a = executor.get_executor(sched, topo=topo_a)
+    ex_b = executor.get_executor(sched, topo=topo_b)
+    assert ex_none is not ex_a and ex_none is not ex_b
+    assert ex_a is not ex_b
+    assert executor.cache_stats()["size"] == 3
+    # repeat lookups hit the same per-geometry entries
+    assert executor.get_executor(sched, topo=topo_a) is ex_a
+    assert executor.get_executor(sched, topo=topo_b) is ex_b
+    assert executor.get_executor(sched) is ex_none
+    assert executor.cache_stats()["size"] == 3
+    # identical numerics across all three compilations
+    rng = np.random.default_rng(9)
+    buf = rng.integers(-8, 8, (8, sched.num_slots, 2)).astype(np.float32)
+    want = SimTransport(8).run_reference(sched, buf)
+    for ex in (ex_none, ex_a, ex_b):
+        assert np.array_equal(want, ex.run_sim(buf))
+
+
+def test_cache_same_geometry_different_instances_share_entry():
+    """The cache keys on the topology's geometry fingerprint, not
+    object identity: two equal Topology instances share one executor;
+    a same-shape topology with different link models does not."""
+    from repro.core.topology import LinkModel, TopoLevel
+
+    sched = REGISTRY["allgather"]["ring"](flat_topology(8))
+    t1, t2 = Topology(8, 4), Topology(8, 4)
+    assert executor.get_executor(sched, topo=t1) is \
+        executor.get_executor(sched, topo=t2)
+    slow_dcn = Topology(
+        8, 4, levels=(TopoLevel("dcn", 2, LinkModel(1e-4, 1e-7), True),
+                      TopoLevel("ici", 4)))
+    assert executor.get_executor(sched, topo=slow_dcn) is not \
+        executor.get_executor(sched, topo=t1)
 
 
 def test_cache_invalidated_by_optimize_flag(monkeypatch):
