@@ -178,6 +178,74 @@ def bench_sim_exec() -> dict:
     return out
 
 
+def bench_makespan() -> dict:
+    """Pipelined-pass (PR 6) section: per corpus schedule, the armed
+    serial time plus consumer compute vs the packed makespan with a
+    splittable tail event, at a beta-dominated slot size — plus the
+    MoE-dispatch overlap win (row-chunked software pipeline priced by
+    ``chunked_makespan``, the tuner's OVERLAP model).  Both numbers are
+    pure alpha-beta model, so the asserts are machine-independent and
+    blocking: the makespan chain must hold pointwise and compute-comm
+    overlap must buy a strict win on the dispatch path."""
+    import dataclasses
+
+    from repro.core import executor
+    from repro.core.schedule import ComputeEvent
+
+    slot = float(1 << 20)
+    out: dict = {"slot_bytes": int(slot), "schedules": {}}
+    strict_wins = 0
+    for tname, topo in _topos().items():
+        for label, base in _schedules(topo):
+            ev = ComputeEvent("consumer", base.modeled_time(topo, 4096.0),
+                              after_round=-1, splittable=True, parts=4)
+            sched = dataclasses.replace(base, compute_events=(ev,))
+            ex = executor.get_executor(sched, topo=topo)
+            serial = (ex.compiled_schedule.modeled_time(topo, slot)
+                      + ev.seconds)
+            mk = ex.makespan(slot)
+            assert mk <= serial * (1 + 1e-9), (tname, label, mk, serial)
+            key = f"{tname}.{label}"
+            out["schedules"][key] = {
+                "serial_s": serial, "makespan_s": mk,
+                "tail_parts": ex.pipeline_tail_parts}
+            if mk < serial * (1 - 1e-9):
+                strict_wins += 1
+                emit("transport", f"{key}.makespan",
+                     round(serial / mk, 3), "x", "overlap win")
+    out["strict_wins"] = strict_wins
+    assert strict_wins >= 1, (
+        "the pipelined pass must strictly beat armed-serial + compute "
+        "on at least one corpus schedule")
+    emit("transport", "makespan.strict_wins", strict_wins)
+
+    # MoE dispatch path: hierarchical alltoall chunked against an
+    # expert-MLP-sized compute block (balanced pipeline regime)
+    from repro.core.algorithms import REGISTRY
+    from repro.core.topology import Topology
+
+    topo = Topology(8, 4)
+    sched = REGISTRY["alltoall"]["hierarchical"](topo)
+    ex = executor.get_executor(sched, topo=topo)
+    compute_s = ex.compiled_schedule.modeled_time(topo, slot)
+    times = {p: ex.chunked_makespan(slot, p, compute_s)
+             for p in (1, 2, 4, 8)}
+    best = min(times, key=lambda p: (times[p], p))
+    win = times[best] < times[1] * (1 - 1e-3)
+    out["moe_overlap"] = {
+        "schedule": sched.name, "compute_s": compute_s,
+        "times_s": {f"p{p}": t for p, t in times.items()},
+        "best_parts": best, "win": bool(win),
+        "speedup": round(times[1] / times[best], 3)}
+    assert win, (
+        "MoE-dispatch chunking must strictly beat the monolithic "
+        f"alltoall + compute at {int(slot)}B: {times}")
+    emit("transport", "makespan.moe_overlap.speedup",
+         out["moe_overlap"]["speedup"], "x",
+         f"p{best} vs p1 on {sched.name}")
+    return out
+
+
 def bench_shardmap_traces() -> dict:
     """Steps vs traces for one jitted compiled collective."""
     import jax
@@ -227,6 +295,7 @@ def payload() -> dict:
     # cold-compile cost, which would zero this telemetry)
     data["executor_cache"] = {
         k: v for k, v in executor.cache_stats().items() if k != "executors"}
+    data["makespan"] = bench_makespan()
     data["sim_exec"] = bench_sim_exec()
     data["shardmap"] = bench_shardmap_traces()
     data["elapsed_s"] = round(time.time() - t0, 3)
@@ -268,6 +337,22 @@ def check_against(baseline_path: str, data: dict) -> None:
     else:
         print(f"# sim-exec speedup {new:.2f}x within 2x of baseline "
               f"{old:.2f}x", file=sys.stderr)
+    # makespan section: pure model numbers, machine-independent, so a
+    # lost compute-comm-overlap win IS a blocking regression (unlike
+    # the walltime trend above)
+    mk = data.get("makespan")
+    if mk is not None:
+        if not mk.get("moe_overlap", {}).get("win"):
+            raise SystemExit(
+                "--check: MoE-dispatch overlap win lost "
+                f"({mk.get('moe_overlap')!r})")
+        if int(mk.get("strict_wins", 0)) < 1:
+            raise SystemExit(
+                "--check: pipelined pass no longer beats armed serial "
+                "anywhere in the corpus")
+        print(f"# makespan: {mk['strict_wins']} overlap wins, "
+              f"moe-dispatch p{mk['moe_overlap']['best_parts']} "
+              f"{mk['moe_overlap']['speedup']}x", file=sys.stderr)
 
 
 def main(argv=()) -> dict:

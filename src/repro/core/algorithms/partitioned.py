@@ -72,7 +72,10 @@ def partitioned_schedule(nranks: int, perm: Sequence[tuple[int, int]],
     time the partition-count tradeoff like any other schedule).
     """
     P = int(partitions)
-    assert P >= 1
+    if P < 1:
+        raise ValueError(
+            f"partitioned_schedule: partitions must be >= 1, got "
+            f"{partitions}")
     edges = tuple((int(s), int(d)) for s, d in perm)
     rounds = []
     for i in range(P):
@@ -120,7 +123,15 @@ def partitioned_ppermute(x: jax.Array, axis_name, perm,
     i+1's transfer overlaps chunk i's consumption (XLA schedules the
     next ppermute-start before the consume of the previous done).
     """
-    assert x.shape[0] % partitions == 0, (x.shape, partitions)
+    if partitions <= 0:
+        raise ValueError(
+            f"partitioned_ppermute: partitions must be >= 1, got "
+            f"{partitions}")
+    if x.shape[0] % partitions:
+        raise ValueError(
+            f"partitioned_ppermute: leading dim {x.shape[0]} of input "
+            f"shape {tuple(x.shape)} must be divisible by "
+            f"partitions={partitions}")
     chunk = x.shape[0] // partitions
     chunks = x.reshape((partitions, chunk) + x.shape[1:])
 

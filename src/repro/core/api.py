@@ -234,6 +234,84 @@ def mpix_alltoall(x: jax.Array, axis_names, *, algorithm: str = "auto",
     return out[: sched.result_blocks].reshape(x.shape)
 
 
+def mpix_alltoall_overlap(x: jax.Array, axis_names, consume, init, *,
+                          chunks: int = 0, compute_s: float = 0.0,
+                          algorithm: str = "auto",
+                          policy: str | None = None,
+                          topo: Topology | None = None):
+    """Partitioned (pipelined) alltoall: the exchange runs in row
+    chunks and each chunk's output is folded through
+    ``consume(carry, out_chunk, i) -> carry`` as soon as it lands, so
+    chunk ``i+1``'s transfer overlaps chunk ``i``'s consumer compute
+    (MPIPCL early-bird receive on the MoE dispatch path).
+
+    ``out_chunk`` is the alltoall of the matching row slice of every
+    block: shape [(n * rows/chunks), ...] with the usual alltoall block
+    order.  ``chunks=0`` lets the tuner pick (``select_overlap_chunks``
+    prices the software pipeline against ``compute_s`` seconds of
+    consumer compute; policy "tuned" reads the persisted table);
+    ``chunks=1`` degenerates to one ``mpix_alltoall`` + one ``consume``
+    call — always a legal fallback.  Explicit ``chunks>1`` must divide
+    the per-block row count."""
+    names = _axes_tuple(axis_names)
+    topo = topo or topology_from_axes(names)
+    n = topo.nranks
+    if x.shape[0] % n:
+        raise ValueError(
+            f"mpix_alltoall_overlap: leading dim {x.shape[0]} of input "
+            f"shape {tuple(x.shape)} must be divisible by nranks={n} "
+            f"(one block per destination rank)")
+    if chunks < 0:
+        raise ValueError(
+            f"mpix_alltoall_overlap: chunks must be >= 0, got {chunks}")
+    rows = x.shape[0] // n
+    if chunks == 0:
+        from repro.core import tuner  # local: avoid import cycle
+        chunks = tuner.select_overlap_chunks(
+            topo, x.size * x.dtype.itemsize, compute_s,
+            policy=policy or _DEFAULT_POLICY)
+        while rows % chunks:          # auto-picked: clamp to a divisor
+            chunks -= 1
+    elif chunks > 1 and rows % chunks:
+        raise ValueError(
+            f"mpix_alltoall_overlap: per-block row count {rows} must "
+            f"be divisible by chunks={chunks}")
+    if chunks <= 1:
+        return consume(init, mpix_alltoall(x, names, algorithm=algorithm,
+                                           policy=policy, topo=topo), 0)
+    rc = rows // chunks
+    algorithm, sched = _resolve("alltoall", algorithm, topo,
+                                x.size * x.dtype.itemsize, policy)
+    if algorithm == "xla":
+        blocks = x.reshape((n, chunks, rc) + x.shape[1:])
+
+        def body(carry, xi):
+            xc, i = xi
+            out = jax.lax.all_to_all(
+                xc.reshape((n * rc,) + x.shape[1:]), names,
+                split_axis=0, concat_axis=0, tiled=True)
+            return consume(carry, out, i), None
+
+        carry, _ = jax.lax.scan(
+            body, init, (blocks.swapaxes(0, 1),
+                         jnp.arange(chunks, dtype=jnp.int32)))
+        return carry
+    blocks = x.reshape((n, rows) + x.shape[1:])
+    if sched.num_blocks > n:  # schedules with a separate recv region
+        pad = jnp.zeros((sched.num_blocks - n,) + blocks.shape[1:],
+                        x.dtype)
+        blocks = jnp.concatenate([blocks, pad], axis=0)
+    tr = ShardMapTransport(n, names, topo=topo)
+
+    def fold(carry, out_c, i):
+        out = (out_c[: sched.result_blocks]
+               .reshape((n * rc,) + x.shape[1:]))
+        return consume(carry, out, i)
+
+    return tr.run_chunked(sched, blocks, chunks=chunks, consume=fold,
+                          init=init)
+
+
 # ---------------------------------------------------------------------------
 # neighborhood collectives (paper §2.2, Listing 3/4)
 # ---------------------------------------------------------------------------
@@ -268,7 +346,8 @@ def mpix_neighbor_alltoallv(x: jax.Array, axis_names, plan) -> jax.Array:
 
 __all__ = [
     "mpix_allgather", "mpix_allreduce", "mpix_reduce_scatter",
-    "mpix_alltoall", "mpix_neighbor_alltoallv", "make_neighbor_plan",
+    "mpix_alltoall", "mpix_alltoall_overlap",
+    "mpix_neighbor_alltoallv", "make_neighbor_plan",
     "topology_from_axes", "set_default_policy", "get_default_policy",
     "ensure_tuned", "executor_cache_stats", "clear_executor_cache",
 ]

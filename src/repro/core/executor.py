@@ -72,7 +72,8 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.schedule import (CommRound, CommSchedule, can_fuse,  # noqa: F401 (can_fuse re-exported: executor is its consumer-facing home)
+from repro.core.schedule import (CommRound, CommSchedule, ComputeEvent,  # noqa: F401 (can_fuse/ComputeEvent re-exported: executor is their consumer-facing home)
+                                 can_fuse, can_split, split_round,
                                  validate_schedules_enabled)
 from repro.core.topology import Topology
 
@@ -100,7 +101,13 @@ class _Edge:
     edge in its *source* round (the round's padded width for dense
     block tables, the per-source ``payload`` count for ragged rounds)
     — the topology-armed pass must preserve it through merges so
-    per-port times never move."""
+    per-port times never move.
+
+    ``orig`` is the index of the *original* (pre-compaction) round the
+    edge came from; buckets carry the min over their members so the
+    makespan pass can resolve ``ComputeEvent.after_round`` anchors —
+    compaction only moves edges earlier, so every final round holding
+    content from original rounds <= i has ``min(orig) <= i``."""
 
     src: int
     dst: int
@@ -108,6 +115,7 @@ class _Edge:
     scatter: np.ndarray          # int, [k_e]; all >= 0 after compression
     has_payload: bool
     price_slots: int = 0
+    orig: int = 0
 
     @property
     def reads(self) -> set:
@@ -118,7 +126,8 @@ class _Edge:
         return set(int(b) for b in self.scatter[self.scatter >= 0])
 
 
-def _round_edges(rnd: CommRound, compress: bool) -> list[_Edge]:
+def _round_edges(rnd: CommRound, compress: bool, orig: int = 0
+                 ) -> list[_Edge]:
     out = []
     for s, d in rnd.perm:
         g = np.asarray(rnd.gather_idx[s], np.int64)
@@ -137,7 +146,7 @@ def _round_edges(rnd: CommRound, compress: bool) -> list[_Edge]:
             # round's full padded width (padding ships zeros)
             price = rnd.k
         out.append(_Edge(int(s), int(d), g, t,
-                         rnd.payload is not None, price))
+                         rnd.payload is not None, price, orig))
     return out
 
 
@@ -229,8 +238,8 @@ def _compact(rounds: tuple[CommRound, ...], compress: bool
     buckets: list[_Bucket] = []
     barrier = 0
     migrated = 0
-    for rnd in rounds:
-        edges = _round_edges(rnd, compress)
+    for orig, rnd in enumerate(rounds):
+        edges = _round_edges(rnd, compress, orig)
         base = _Bucket(rnd.reduce)
         buckets.append(base)
         for e in edges:
@@ -314,8 +323,16 @@ def _intra_round_hazard(edges: list[_Edge]) -> bool:
     return False
 
 
+def _bucket_orig_lo(bucket: _Bucket) -> int:
+    """Earliest original-round index whose content this bucket holds
+    (min composes through stacked passes: pass 2 consumes pass 1's
+    rebuilt rounds with their per-round ``orig_lo`` fed back in)."""
+    return min((e.orig for e in bucket.edges), default=0)
+
+
 def _compact_armed(rounds: tuple[CommRound, ...], topo: Topology,
-                   compress: bool) -> tuple[list[_Bucket], int, int]:
+                   compress: bool, origs: tuple[int, ...] | None = None
+                   ) -> tuple[list[_Bucket], int, int]:
     """Cost-model-armed compaction (run AFTER the topology-free pass).
 
     The per-edge hazard lower bounds below are exactly the src/dst
@@ -354,8 +371,9 @@ def _compact_armed(rounds: tuple[CommRound, ...], topo: Topology,
     barrier = 0
     merged_rounds = 0
     split_edges = 0
-    for rnd in rounds:
-        edges = _round_edges(rnd, compress)
+    for i, rnd in enumerate(rounds):
+        edges = _round_edges(rnd, compress,
+                             i if origs is None else origs[i])
         base = _Bucket(rnd.reduce)
         buckets.append(base)
         for e in edges:
@@ -457,6 +475,159 @@ def _rebuild_round(bucket: _Bucket, nranks: int, *,
                                        int((e.gather >= 0).sum())))
     return CommRound(perm=tuple(perm), gather_idx=gi, scatter_idx=si,
                      reduce=bucket.reduce, payload=payload)
+
+
+# ---------------------------------------------------------------------------
+# makespan model + pipelined pass (pass 3; pricing/planning only)
+# ---------------------------------------------------------------------------
+
+
+_PIPELINE_PROBE_BYTES = (1.0, 4096.0, float(1 << 20))
+# alpha-, mixed-, beta-dominated probe sizes for the tail-split rollback
+# check (same values the conformance fuzzer probes); the packing moves
+# themselves are size-independent, only the split needs the probes as
+# defense in depth on top of the per-port alpha precondition.
+
+
+def _round_level_times(topo: Topology, rnd: CommRound,
+                       slot_nbytes: float) -> dict[int, float]:
+    """Per-topology-level occupancy of one round: the same per-(src,
+    level) injection-port accounting as ``Topology.round_time`` but
+    grouped by level instead of collapsed to one max — the channels of
+    the makespan model.  ``max(out.values())`` equals ``round_time``
+    exactly, so singleton groups reproduce the serial model."""
+    if rnd.payload is None:
+        per_edge = [float(rnd.k) * slot_nbytes] * len(rnd.perm)
+    else:
+        per_edge = [rnd.edge_slots(s) * slot_nbytes for s, _ in rnd.perm]
+    per_port: dict[tuple[int, int], tuple[int, float]] = {}
+    for (s, d), b in zip(rnd.perm, per_edge):
+        if s == d:
+            continue
+        key = (s, topo.link_level(s, d))
+        n, tot = per_port.get(key, (0, 0.0))
+        per_port[key] = (n + 1, tot + b)
+    out: dict[int, float] = {}
+    for (s, lvl), (n, tot) in per_port.items():
+        t = topo.levels[lvl].link.time(tot, nmsgs=n)
+        if t > out.get(lvl, 0.0):
+            out[lvl] = t
+    return out
+
+
+def _round_chans(topo: Topology, rnd: CommRound) -> frozenset[int]:
+    """Topology levels (channels) a round occupies — size-independent."""
+    return frozenset(topo.link_level(s, d)
+                     for s, d in rnd.perm if s != d)
+
+
+def _rounds_commute(a: CommRound, b: CommRound) -> bool:
+    """True when executing a and b in either order (or concurrently)
+    is bit-identical: neither reduces and no rank sees a RAW, WAR, or
+    WAW pair between them.  The makespan packer may co-schedule only
+    commuting rounds (events never constrain rounds: they are pure
+    readers of a buffer snapshot)."""
+    if a.reduce or b.reduce:
+        return False
+    for r in (a.src_set | a.dst_set) & (b.src_set | b.dst_set):
+        if a.writes(r) & (b.reads(r) | b.writes(r)):
+            return False
+        if a.reads(r) & b.writes(r):
+            return False
+    return True
+
+
+# a _pack item is ("r", CommRound) or ("e", seconds, dep_item_index);
+# an event's dep is the item index of the round it waits on (-1 = none).
+
+
+def _pack(items: list[tuple], topo: Topology) -> list[list[tuple]]:
+    """Greedy makespan packing: assign items, in order, to concurrency
+    groups.  A group runs its members concurrently across channels
+    (topology levels + one compute channel) and groups serialize, so
+
+        makespan = sum over groups of
+                   max(sum of member event seconds,
+                       max over levels of sum of member round times).
+
+    Every placement is *pointwise* cost-safe by construction: a group's
+    duration is ``max_c sum d_(j,c) <= sum_j max_c d_(j,c)``, so any
+    legal packing's makespan is <= the serial sum (armed modeled_time +
+    total event seconds) at every slot size.  Placement rules:
+
+      * a round lands in the earliest group after every round it does
+        not commute with (and after the latest reduce barrier), and
+        only joins a group whose rounds occupy disjoint channels — the
+        DCN/ICI interleave; channel overlap would serialize inside the
+        group's sum and hide real occupancy, so it opens a new group;
+      * a reduce round is a barrier: its own group, nothing crosses;
+      * an event lands in the earliest group strictly after its dep
+        round's group (events on one consumer core serialize by
+        summing inside a group — co-resident rounds still overlap).
+    """
+    groups: list[list[tuple]] = []
+    chans: list[set[int]] = []          # per group: levels occupied
+    has_reduce: list[bool] = []
+    group_of: dict[int, int] = {}
+    barrier = 0
+    for j, it in enumerate(items):
+        if it[0] == "r":
+            rnd = it[1]
+            lo = barrier
+            for i in range(j):
+                if (items[i][0] == "r"
+                        and not _rounds_commute(items[i][1], rnd)):
+                    lo = max(lo, group_of[i] + 1)
+            if rnd.reduce:
+                group_of[j] = len(groups)
+                groups.append([it])
+                chans.append(set(_round_chans(topo, rnd)))
+                has_reduce.append(True)
+                barrier = len(groups)
+                continue
+            rc = _round_chans(topo, rnd)
+            g = None
+            for gi in range(lo, len(groups)):
+                if not has_reduce[gi] and not (chans[gi] & rc):
+                    g = gi
+                    break
+            if g is None:
+                g = len(groups)
+                groups.append([])
+                chans.append(set())
+                has_reduce.append(False)
+            groups[g].append(it)
+            chans[g] |= rc
+            group_of[j] = g
+        else:
+            dep = it[2]
+            lo = barrier
+            if dep >= 0:
+                lo = max(lo, group_of[dep] + 1)
+            if lo >= len(groups):
+                groups.append([])
+                chans.append(set())
+                has_reduce.append(False)
+            group_of[j] = lo
+            groups[lo].append(it)
+    return groups
+
+
+def _groups_makespan(groups: list[list[tuple]], topo: Topology,
+                     slot_nbytes: float) -> float:
+    total = 0.0
+    for grp in groups:
+        per_lvl: dict[int, float] = {}
+        ev_s = 0.0
+        for it in grp:
+            if it[0] == "r":
+                for lvl, t in _round_level_times(topo, it[1],
+                                                 slot_nbytes).items():
+                    per_lvl[lvl] = per_lvl.get(lvl, 0.0) + t
+            else:
+                ev_s += it[1]
+        total += max([ev_s] + list(per_lvl.values()))
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -609,16 +780,19 @@ class CompiledExec:
             compiled_rounds = tuple(_rebuild_round(b, self.nranks)
                                     for b in buckets)
             self.rounds_after_unarmed = len(compiled_rounds)
+            origs = tuple(_bucket_orig_lo(b) for b in buckets)
             if topo is not None:
                 # armed pass runs ON the topology-free output, so every
                 # pointwise-safe move keeps it <= that pass, which is
                 # itself <= the unoptimized schedule
                 (abuckets, self.armed_merged_rounds,
                  self.armed_split_edges) = _compact_armed(
-                     compiled_rounds, topo, compress=True)
+                     compiled_rounds, topo, compress=True, origs=origs)
                 compiled_rounds = tuple(
                     _rebuild_round(b, self.nranks, priced=True)
                     for b in abuckets)
+                origs = tuple(_bucket_orig_lo(b) for b in abuckets)
+            self._origs = origs
             self.local_pre = folded.local_pre
             self.local_post = post
         else:
@@ -626,6 +800,7 @@ class CompiledExec:
             self.migrated_edges = 0
             compiled_rounds = schedule.rounds
             self.rounds_after_unarmed = len(compiled_rounds)
+            self._origs = tuple(range(len(compiled_rounds)))
             self.local_pre = schedule.local_pre
             self.local_post = schedule.local_post
         self.compiled_schedule = CommSchedule(
@@ -638,12 +813,155 @@ class CompiledExec:
         self.rounds_after = len(compiled_rounds)
         self._rounds = tuple(_ExecRound(r, self.num_slots)
                              for r in compiled_rounds)
+        # pass 3: makespan planning (pricing only; never touches the
+        # executed rounds, so every modeled_time/bit-exactness contract
+        # above is untouched by construction)
+        self._groups: list[list[tuple]] | None = None
+        self.pipelined_schedule: CommSchedule | None = None
+        self.pipeline_tail_parts = 0
+        if optimize and topo is not None:
+            self._build_pipeline(compiled_rounds)
         self._pre = (None if self.local_pre is None
                      else np.asarray(self.local_pre, np.int64))
         self._post = (None if self.local_post is None
                       else np.asarray(self.local_post, np.int64))
         self._jnp_pre = None
         self._jnp_post = None
+
+    # -- pass 3: makespan planning + tail-chunk pipelining ----------------
+    def _event_deps(self, nrounds: int) -> list[int]:
+        """Resolve each ComputeEvent's ``after_round`` anchor (an index
+        into the ORIGINAL schedule) onto the compiled rounds: the event
+        depends on the LAST compiled round holding content from original
+        rounds <= anchor.  Compaction only moves edges earlier and
+        buckets carry ``min(orig)``, so ``origs[f] <= anchor`` holds
+        exactly for the compiled prefix the anchor's data lives in."""
+        deps = []
+        for ev in self.schedule.compute_events:
+            a = (ev.after_round if ev.after_round >= 0
+                 else self.rounds_before - 1)
+            dep = -1
+            for f in range(nrounds):
+                if self._origs[f] <= a:
+                    dep = f
+            deps.append(dep)
+        return deps
+
+    def _build_pipeline(self, compiled_rounds: tuple[CommRound, ...]):
+        """The pipelined pass: pack the armed rounds + registered
+        compute events into a makespan plan, then try ONE structural
+        move — split the tail round into chunks so slices of a
+        splittable tail event overlap chunk transfers (the MPIPCL
+        partitioned-communication shape).  The split commits only when
+        (a) ``can_split`` legality holds, (b) every injection port's
+        alpha is <= the per-slice compute (the size-independent
+        pointwise-safety precondition: extra alphas hide behind
+        compute), and (c) the packed makespan is no worse at every
+        probe size — whole-move rollback otherwise (the PR 4 lesson)."""
+        events = self.schedule.compute_events
+        topo = self.topo
+        R = len(compiled_rounds)
+        deps = self._event_deps(R)
+        base_items: list[tuple] = [("r", r) for r in compiled_rounds]
+        for ev, dep in zip(events, deps):
+            base_items.append(("e", float(ev.seconds), dep))
+        groups = _pack(base_items, topo)
+        self._groups = groups
+        if R == 0:
+            return
+        # tail-split candidate: first splittable event anchored on the
+        # final compiled round with real compute behind it
+        cand = next((i for i, (ev, dep) in enumerate(zip(events, deps))
+                     if ev.splittable and dep == R - 1
+                     and ev.seconds > 0.0), None)
+        if cand is None:
+            return
+        ev = events[cand]
+        tail = compiled_rounds[-1]
+        pref = [ev.parts] if ev.parts >= 2 else []
+        parts = None
+        for p in pref + [8, 4, 2]:
+            if not can_split(tail, p):
+                continue
+            slice_s = ev.seconds / p
+            ports = {(s, topo.link_level(s, d))
+                     for s, d in tail.perm if s != d}
+            if all(topo.levels[lvl].link.alpha <= slice_s
+                   for _, lvl in ports):
+                parts = p
+                break
+        if parts is None:
+            return
+        chunks = split_round(tail, parts)
+        split_items: list[tuple] = [("r", r)
+                                    for r in compiled_rounds[:-1]]
+        c0 = len(split_items)
+        split_items.extend(("r", c) for c in chunks)
+        for i, (e2, dep) in enumerate(zip(events, deps)):
+            if i == cand:
+                split_items.extend(
+                    ("e", e2.seconds / parts, c0 + ci)
+                    for ci in range(parts))
+            else:
+                d2 = dep if dep < R - 1 else c0 + parts - 1
+                split_items.append(("e", float(e2.seconds), d2))
+        sgroups = _pack(split_items, topo)
+        for s in _PIPELINE_PROBE_BYTES:
+            if (_groups_makespan(sgroups, topo, s)
+                    > _groups_makespan(groups, topo, s) * (1 + 1e-9)):
+                return                     # whole-move rollback
+        self._groups = sgroups
+        self.pipeline_tail_parts = parts
+        # execution artifact: chunks run sequentially, which is
+        # bit-identical to the unsplit round (can_split forbids
+        # chunk-crossing RAW; live scatter targets are distinct, so
+        # chunk writes are disjoint).  Events are model-only and their
+        # anchors index the original rounds, so they are dropped here.
+        self.pipelined_schedule = CommSchedule(
+            nranks=self.nranks, num_slots=self.num_slots,
+            rounds=compiled_rounds[:-1] + chunks,
+            name=self.schedule.name + "+pipelined",
+            slot_bytes=self.schedule.slot_bytes,
+            local_pre=self.local_pre, local_post=self.local_post,
+            out_slots=self.schedule.out_slots,
+            out_offsets=self.schedule.out_offsets)
+
+    def makespan(self, slot_nbytes: float) -> float:
+        """Modeled completion time of the packed plan (pass 3): groups
+        serialize, members of a group overlap across channels (topology
+        levels + the consumer-compute channel).  Pointwise <= the armed
+        serial ``modeled_time`` plus total registered event seconds, at
+        every slot size — the pipelined arm of the guideline chain."""
+        if self._groups is None:
+            raise RuntimeError(
+                "makespan requires a topology-armed optimized executor "
+                "(compile with optimize=True and a topo)")
+        return _groups_makespan(self._groups, self.topo, slot_nbytes)
+
+    def chunked_makespan(self, slot_nbytes: float, parts: int,
+                         compute_s: float) -> float:
+        """Software-pipeline model of ROW-chunked execution — the shape
+        ``transport.run_chunked`` + a ``consume`` callback lowers to
+        (MPIPCL partitioned communication over the row axis): the whole
+        compiled schedule runs once per chunk at ``1/parts`` of the
+        bytes, and chunk ``i``'s transfer overlaps chunk ``i-1``'s
+        consumer compute.  Complements ``makespan`` (slot-granularity
+        tail splitting): row chunking applies to ANY schedule, including
+        k=1 rounds the IR-level ``split_round`` must refuse.  Callers
+        (the tuner) must compare against ``parts=1`` and keep the min —
+        per-chunk alphas are not free and small messages lose."""
+        if self._groups is None:
+            raise RuntimeError(
+                "chunked_makespan requires a topology-armed optimized "
+                "executor (compile with optimize=True and a topo)")
+        serial = self.compiled_schedule.modeled_time(self.topo,
+                                                     slot_nbytes)
+        if parts <= 1:
+            return serial + compute_s
+        c = self.compiled_schedule.modeled_time(
+            self.topo, slot_nbytes / float(parts))
+        e = compute_s / float(parts)
+        return c + (parts - 1) * max(c, e) + e
 
     # -- numpy backend (vectorized; no per-rank/per-slot Python loops) ----
     def run_sim(self, buf: np.ndarray) -> np.ndarray:
@@ -742,6 +1060,13 @@ class CompiledExec:
             "migrated_edges": self.migrated_edges,
             "armed_merged_rounds": self.armed_merged_rounds,
             "armed_split_edges": self.armed_split_edges,
+            "pipeline_groups": (None if self._groups is None
+                                else len(self._groups)),
+            "pipeline_packed_rounds": (
+                None if self._groups is None
+                else sum(1 for g in self._groups for it in g
+                         if it[0] == "r")),
+            "pipeline_tail_parts": self.pipeline_tail_parts,
             "pre_folded": self.pre_folded,
             "trace_count": self.trace_count,
             "sim_runs": self.sim_runs,

@@ -78,3 +78,54 @@ def stage_params_spec(n_layers: int, n_stages: int) -> list[range]:
         start += k
     assert start == n_layers
     return out
+
+
+# ---------------------------------------------------------------------------
+# makespan-model view of the GPipe schedule (shared compute_events IR)
+# ---------------------------------------------------------------------------
+
+
+def gpipe_compute_events(n_microbatches: int, n_stages: int,
+                         stage_seconds: float) -> tuple:
+    """The pipeline's per-tick compute as executor ``ComputeEvent``s:
+    tick ``t`` of the T = M + S - 1 wavefront is one opaque costed
+    block of ``stage_seconds`` anchored after shift round ``t`` — the
+    same vocabulary MoE dispatch and the grad-sync overlap register
+    their consumer compute with, so the makespan model prices GPipe
+    like any other pipelined schedule."""
+    from repro.core.schedule import ComputeEvent
+
+    T = n_microbatches + n_stages - 1
+    return tuple(ComputeEvent(f"tick{t}", float(stage_seconds),
+                              after_round=t) for t in range(T))
+
+
+def gpipe_wavefront_schedule(n_microbatches: int, n_stages: int,
+                             stage_seconds: float):
+    """The GPipe wavefront as a ``CommSchedule`` + compute events.
+
+    One ring-shift round per tick (the ``ppermute`` advancing the
+    activation in flight) with a ``ComputeEvent`` per tick for the
+    stage compute.  Consecutive shifts reuse the same slot (RAW), so
+    no compaction pass may fuse them — the armed executor's makespan
+    therefore reproduces the classic pipeline cost
+    ``shift + sum(max(shift, compute)) + compute`` instead of the
+    serial sum, without any GPipe-specific pricing code."""
+    import numpy as np
+
+    from repro.core.schedule import CommSchedule, make_round
+
+    M, S = int(n_microbatches), int(n_stages)
+    if M < 1 or S < 1:
+        raise ValueError(
+            f"gpipe_wavefront_schedule: need n_microbatches >= 1 and "
+            f"n_stages >= 1, got {n_microbatches}, {n_stages}")
+    T = M + S - 1
+    edges = tuple((i, (i + 1) % S) for i in range(S))
+    send = {s: [0] for s, _ in edges}
+    recv = {d: [0] for _, d in edges}
+    rounds = tuple(make_round(S, edges, send, recv) for _ in range(T))
+    return CommSchedule(
+        nranks=S, num_slots=1, rounds=rounds,
+        name=f"gpipe.wavefront[m{M}.s{S}]",
+        compute_events=gpipe_compute_events(M, S, stage_seconds))

@@ -171,6 +171,15 @@ class NeighborPlan:
         """alpha-beta time of the exchange with ``elem_bytes``-wide rows."""
         return self.schedule.modeled_time(self.topo, elem_bytes)
 
+    def makespan(self, elem_bytes: int = ELEM_BYTES) -> float:
+        """Makespan of the armed executor's packed plan (executor pass
+        3): rounds on disjoint topology levels overlap, so a plan whose
+        compiled rounds alternate DCN and intra-pod hops is priced below
+        the serial ``modeled_time`` — never above it (pointwise)."""
+        from repro.core import executor
+        return executor.get_executor(self.schedule,
+                                     topo=self.topo).makespan(elem_bytes)
+
 
 # ---------------------------------------------------------------------------
 # plan building

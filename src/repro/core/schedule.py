@@ -62,6 +62,51 @@ class NotApplicable(AssertionError):
 
 
 @dataclasses.dataclass(frozen=True)
+class ComputeEvent:
+    """An opaque costed block of consumer compute attached to a schedule.
+
+    MPIPCL's partitioned communication exists so chunk transfers overlap
+    with the compute that produces/consumes them; a ``ComputeEvent`` is
+    how a consumer registers that compute with the executor's makespan
+    model (core.executor pass 3) without the IR knowing what it is.
+
+    Events are *modeling artifacts*: execution ignores them entirely
+    (bit-exactness is untouched); only ``CompiledExec.makespan`` and the
+    pipelined pass read them.  An event is a pure consumer — it reads a
+    snapshot of the buffer after ``after_round`` and writes nothing, so
+    it never constrains round motion, only its own placement.
+
+    after_round: index into the *original* schedule's rounds the event
+                 waits on (-1 = after the last round).
+    splittable:  the compute can run as equal slices over chunks of its
+                 input — the precondition for the tail-chunk overlap
+                 move (each slice then waits only for its chunk).
+    parts:       preferred slice count when splittable (0 = let the
+                 executor choose).
+    """
+
+    name: str
+    seconds: float
+    after_round: int = -1
+    splittable: bool = False
+    parts: int = 0
+
+    def __post_init__(self):
+        if self.seconds < 0:
+            raise ValueError(
+                f"ComputeEvent {self.name!r}: seconds must be >= 0, "
+                f"got {self.seconds}")
+        if self.after_round < -1:
+            raise ValueError(
+                f"ComputeEvent {self.name!r}: after_round must be >= -1, "
+                f"got {self.after_round}")
+        if self.parts < 0:
+            raise ValueError(
+                f"ComputeEvent {self.name!r}: parts must be >= 0, "
+                f"got {self.parts}")
+
+
+@dataclasses.dataclass(frozen=True)
 class CommRound:
     """One communication round of the unified IR.
 
@@ -186,6 +231,61 @@ def can_fuse(a: CommRound, b: CommRound) -> bool:
     return True
 
 
+def can_split(rnd: CommRound, parts: int) -> bool:
+    """True when ``rnd`` may be partitioned into ``parts`` sequential
+    chunk rounds with identical semantics (MPIPCL partitioning on the
+    unified IR).
+
+    Legality:
+      * ``parts >= 2`` and the round is not a reduce (chunked
+        accumulation would reorder float adds relative to concurrent
+        delivery);
+      * dense tables only (``payload is None``) with ``k % parts == 0``
+        — equal chunks are what keeps the chunked alpha-beta time
+        provably bounded at every slot size (ceil splits introduce
+        size-dependent remainder terms);
+      * no scatter->gather aliasing anywhere in the round, INCLUDING a
+        single edge whose own writes alias its own reads: in the
+        original round every gather reads pre-round state, but chunk i
+        scatters before chunk i+1 gathers, so any aliasing would
+        reorder a write before a read.
+    (Write-after-write needs no check: live scatter targets are
+    distinct per destination — a schedule invariant — so chunks write
+    disjoint rows.)
+    """
+    if parts < 2 or rnd.reduce or rnd.payload is not None:
+        return False
+    if rnd.k % parts:
+        return False
+    for s1, d1 in rnd.perm:
+        for s2, _ in rnd.perm:
+            if d1 == s2 and rnd.writes(d1) & rnd.reads(s2):
+                return False
+    return True
+
+
+def split_round(rnd: CommRound, parts: int) -> tuple[CommRound, ...]:
+    """Partition ``rnd`` into ``parts`` chunk rounds; chunk ``i``
+    carries the position-contiguous slice ``[i*k/parts, (i+1)*k/parts)``
+    of every edge's gather/scatter vectors.  Executing the chunks in
+    order is bit-identical to the original round (``can_split`` is the
+    precondition); per port the chunk sequence costs
+    ``parts * alpha + k * slot_bytes * beta`` — the alpha-beta price of
+    MPIPCL's independently-committed partitions.
+    """
+    assert can_split(rnd, parts), (rnd.k, parts, rnd.reduce)
+    kc = rnd.k // parts
+    out = []
+    for i in range(parts):
+        sl = slice(i * kc, (i + 1) * kc)
+        out.append(CommRound(perm=rnd.perm,
+                             gather_idx=np.ascontiguousarray(
+                                 rnd.gather_idx[:, sl]),
+                             scatter_idx=np.ascontiguousarray(
+                                 rnd.scatter_idx[:, sl])))
+    return tuple(out)
+
+
 @dataclasses.dataclass(frozen=True)
 class CommSchedule:
     """A compiled communication pattern: rounds + buffer geometry.
@@ -204,6 +304,9 @@ class CommSchedule:
     out_offsets: optional per-rank [nranks] start row of the result
                  region (neighborhood plans land recv segments mid-
                  buffer; dense collectives leave this None = row 0).
+    compute_events: optional ``ComputeEvent`` list — opaque costed
+                 consumer-compute barriers the executor's makespan
+                 model prices and overlaps; execution ignores them.
     """
 
     nranks: int
@@ -215,6 +318,19 @@ class CommSchedule:
     local_post: np.ndarray | None = None
     out_slots: int | None = None
     out_offsets: np.ndarray | None = None
+    compute_events: tuple[ComputeEvent, ...] = ()
+
+    def __post_init__(self):
+        if not isinstance(self.compute_events, tuple):
+            object.__setattr__(self, "compute_events",
+                               tuple(self.compute_events))
+        if not validate_schedules_enabled():
+            return
+        for ev in self.compute_events:
+            assert isinstance(ev, ComputeEvent), ev
+            assert ev.after_round < len(self.rounds), (
+                f"event {ev.name!r} anchored after round {ev.after_round} "
+                f"but the schedule has {len(self.rounds)} rounds")
 
     @property
     def result_slots(self) -> int:
@@ -343,6 +459,12 @@ class CommSchedule:
             feed("g", rnd.gather_idx)
             feed("s", rnd.scatter_idx)
             feed("p", rnd.payload)
+        for ev in self.compute_events:
+            # events change what the makespan pass produces (groups,
+            # tail split), so they are identity-bearing for the
+            # executor cache even though execution ignores them
+            h.update(f"E{ev.name}|{ev.seconds!r}|{ev.after_round}|"
+                     f"{int(ev.splittable)}|{ev.parts}".encode())
         fp = h.hexdigest()
         # memo on the frozen instance (plain attribute, not a field:
         # equality/repr are unaffected and the hash is deterministic)

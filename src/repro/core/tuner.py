@@ -55,6 +55,10 @@ from repro.core.topology import Topology
 COLLECTIVES = ("allgather", "allreduce", "reduce_scatter", "alltoall")
 # non-dense paths tuned through the generic CommSchedule timer
 PARTITIONED = "partitioned"
+# pipelined compute-comm overlap (row-chunked alltoall + consumer
+# compute, priced by the executor's makespan model)
+OVERLAP = "overlap"
+_OVERLAP_PARTS = (1, 2, 4, 8)
 DEFAULT_SIZES = (1 << 10, 1 << 14, 1 << 18, 1 << 22)   # bytes per rank
 _AXIS = "tune"          # mesh axis name used for measurement runs
 _ELEM = 4               # measurement payloads are float32
@@ -450,6 +454,86 @@ def tune_partitioned(topo: Topology, *, sizes=DEFAULT_SIZES,
     return per
 
 
+def tune_overlap(topo: Topology, *, sizes=DEFAULT_SIZES,
+                 repeats: int = 3, force_model: bool = False,
+                 compute_ratio: float = 1.0) -> dict:
+    """Per-size-bucket chunk counts for pipelined alltoall + consumer
+    compute (``mpix_alltoall_overlap``): each candidate pK prices the
+    row-chunked software pipeline via the armed executor's
+    ``chunked_makespan`` — per-chunk transfer overlapping the previous
+    chunk's compute slice — against ``compute_ratio`` * the serial
+    transfer time of consumer compute.  p1 is the unpipelined serial
+    baseline and wins ties, so the committed choice can never lose to
+    it (the ``pipelined <= armed`` guideline below re-verifies this on
+    every load).  Pricing is purely the makespan model — overlap is a
+    scheduling property the wall clock of a simulated substrate cannot
+    observe — so ``repeats``/``force_model`` are accepted only for
+    signature uniformity with the other tune_* entries."""
+    del repeats, force_model
+    from repro.core import executor
+
+    cands = _candidates("alltoall", topo)
+    per: dict = {}
+    for nbytes in sizes:
+        name = min(cands,
+                   key=lambda a: _modeled(cands[a], topo, int(nbytes)))
+        sched = cands[name]
+        block = max(1, int(nbytes) // max(1, sched.num_blocks))
+        ex = executor.get_executor(sched, topo=topo)
+        compute_s = (ex.compiled_schedule.modeled_time(topo, block)
+                     * compute_ratio)
+        times = {f"p{p}": float(ex.chunked_makespan(block, p, compute_s))
+                 for p in _OVERLAP_PARTS}
+        best = min(times, key=lambda k: (times[k], int(k[1:])))
+        per[str(size_bucket(int(nbytes)))] = {
+            "best": best,
+            "nbytes": int(nbytes),
+            "times": times,
+            "schedule": name,
+            "compute_s": float(compute_s),
+        }
+    return per
+
+
+def select_overlap_chunks(topo: Topology, nbytes: int, compute_s: float,
+                          *, policy: str | None = None,
+                          table: TunedTable | None = None,
+                          path: str | Path | None = None) -> int:
+    """Chunk count for ``mpix_alltoall_overlap``'s auto mode.
+
+    policy "tuned" reads the persisted ``OVERLAP`` winner for this
+    substrate (falling back to model pricing when no table exists);
+    "fixed" always returns 1 (unpipelined — the paper-default ladder
+    rung); anything else prices the software pipeline with the CALLER's
+    ``compute_s`` through ``chunked_makespan`` and returns the argmin
+    over p in {1, 2, 4, 8} (ties to the smallest — never pipeline for
+    free)."""
+    if policy == "fixed":
+        return 1
+    if policy == "tuned":
+        if table is None:
+            for fp in (substrate_fingerprint(topo),
+                       topo.fingerprint("model")):
+                table = load_table(fp, path=path)
+                if table is not None:
+                    break
+        if table is not None:
+            name = table.lookup(OVERLAP, int(nbytes))
+            if (isinstance(name, str) and len(name) > 1
+                    and name[0] == "p" and name[1:].isdigit()):
+                return max(1, int(name[1:]))
+        # no table / no OVERLAP section: fall through to model pricing
+    from repro.core import executor
+
+    cands = _candidates("alltoall", topo)
+    name = min(cands, key=lambda a: _modeled(cands[a], topo, int(nbytes)))
+    sched = cands[name]
+    block = max(1, int(nbytes) // max(1, sched.num_blocks))
+    ex = executor.get_executor(sched, topo=topo)
+    return min(_OVERLAP_PARTS,
+               key=lambda p: (ex.chunked_makespan(block, p, compute_s), p))
+
+
 def autotune(topo: Topology, *, path: str | Path | None = None,
              sizes=DEFAULT_SIZES, repeats: int = 3,
              force_model: bool = False, tol: float = 1.10,
@@ -467,6 +551,8 @@ def autotune(topo: Topology, *, path: str | Path | None = None,
     table.entries[NEIGHBOR] = tune_neighbor(
         topo, sizes=sizes, repeats=repeats, force_model=force_model)
     table.entries[PARTITIONED] = tune_partitioned(
+        topo, sizes=sizes, repeats=repeats, force_model=force_model)
+    table.entries[OVERLAP] = tune_overlap(
         topo, sizes=sizes, repeats=repeats, force_model=force_model)
     table.violations = verify_guidelines(table, topo, tol=tol)
     save_table(table, path=path)
@@ -556,6 +642,22 @@ def _guideline_findings(table: TunedTable, topo: Topology | None = None,
                 f"({times['locality_aware']:.3e} > "
                 f"{times['standard']:.3e})",
                 ((NEIGHBOR, b),)))
+
+    # overlap: the committed pipelined plan never loses to the serial
+    # p1 baseline (pipelined <= armed, the new rung of the chain; pK
+    # entries MAY exceed p1 — alpha-dominated sizes lose to chunking
+    # and the selection simply keeps p1, which is not a violation)
+    for b, rec in sorted(e.get(OVERLAP, {}).items(),
+                         key=lambda kv: int(kv[0])):
+        t_best = rec["times"].get(rec["best"])
+        t_p1 = rec["times"].get("p1")
+        if (t_best is not None and t_p1 is not None
+                and t_best > tol * t_p1):
+            out.append((
+                f"{OVERLAP}.{rec['best']} slower than unpipelined p1 "
+                f"@bucket {b} ({t_best:.3e} > {t_p1:.3e}) (guideline: "
+                f"pipelined <= armed serial)",
+                ((OVERLAP, b),)))
     return out
 
 
@@ -573,6 +675,8 @@ def verify_guidelines(table: TunedTable, topo: Topology | None = None,
       * neighbor aggregation: on multi-pod topologies the
         locality-aware plan should not lose to the standard plan for
         the largest probed bucket (aggregate <= standard)
+      * overlap: per bucket, the committed pipelined chunk count never
+        loses to the unpipelined p1 baseline (pipelined <= armed)
     """
     return [msg for msg, _ in _guideline_findings(table, topo, tol=tol)]
 
@@ -661,6 +765,8 @@ def stale_cells(table: TunedTable, topo: Topology) -> list:
             want = set(NEIGHBOR_MODES)
         elif coll == PARTITIONED:
             want = set(REGISTRY[PARTITIONED])
+        elif coll == OVERLAP:
+            want = {f"p{p}" for p in _OVERLAP_PARTS}
         else:
             continue
         for bucket, rec in per.items():
@@ -722,6 +828,10 @@ def retune_cells(table: TunedTable, topo: Topology, cells,
                 force_model=force_model).values()))
         elif coll == PARTITIONED:
             fresh = next(iter(tune_partitioned(
+                topo, sizes=(nbytes,), repeats=repeats,
+                force_model=force_model).values()))
+        elif coll == OVERLAP:
+            fresh = next(iter(tune_overlap(
                 topo, sizes=(nbytes,), repeats=repeats,
                 force_model=force_model).values()))
         else:

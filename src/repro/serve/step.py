@@ -23,12 +23,18 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import model as M
 from repro.train import sharding
+from repro.train.moe_dispatch import EPOptions, make_moe_dispatch
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeOptions:
     use_kernel: bool = False
     long_context: bool = False       # SP cache layout (batch-1 decode)
+    ep_options: EPOptions | None = None
+    # explicit expert-parallel dispatch for MoE archs during prefill
+    # (None = XLA-sharded default).  With overlap_chunks set, the
+    # dispatch alltoall pipelines against the expert MLPs — the serve
+    # hot path gets the same compute-comm overlap as training.
 
 
 def init_serve_cache(cfg, batch: int, max_len: int):
@@ -39,6 +45,11 @@ def make_prefill_step(cfg, mesh, opts: ServeOptions) -> Callable:
     """(params, tokens[, frames/vision]) -> logits — full-sequence
     forward used for prompt processing; dry-run target of prefill_32k."""
 
+    moe_dispatch = None
+    if opts.ep_options is not None and cfg.moe is not None:
+        moe_dispatch = make_moe_dispatch(mesh, opts.ep_options,
+                                         cfg.mlp_act)
+
     def prefill(params, batch):
         kw = {}
         if cfg.encoder is not None:
@@ -46,7 +57,8 @@ def make_prefill_step(cfg, mesh, opts: ServeOptions) -> Callable:
         if cfg.vision_prefix:
             kw["vision_embeds"] = batch["vision_embeds"]
         return M.forward(params, cfg, batch["tokens"],
-                         use_kernel=opts.use_kernel, **kw)
+                         use_kernel=opts.use_kernel,
+                         moe_dispatch=moe_dispatch, **kw)
 
     return prefill
 

@@ -43,6 +43,13 @@ class EPOptions:
     policy: str | None = None       # selection policy for "auto" algos
                                     # (None = process default; "tuned"
                                     # reads tuner.autotune's table)
+    overlap_chunks: int | None = None
+    # pipelined dispatch (MPIPCL partitioned comm): the dispatch
+    # alltoall runs in capacity chunks, each chunk's expert MLP
+    # overlapping the next chunk's transfer.  None = off (monolithic),
+    # 0 = auto (tuner prices the software pipeline against the expert
+    # FLOPs per chunk), >= 2 = explicit chunk count (clamped to the
+    # largest divisor of the capacity C).  Bit-exact either way.
 
 
 def ep_axes_for(cfg_moe: MoEConfig, mesh) -> tuple[str, ...]:
@@ -89,6 +96,68 @@ def make_moe_dispatch(mesh, opts: EPOptions, act: str = "silu"):
     return dispatch
 
 
+def _overlap_chunks(opts: EPOptions, *, cfg: MoEConfig, ep, E_loc: int,
+                    N_ep: int, C: int, d: int, f: int,
+                    itemsize: int) -> int:
+    """Resolve ``EPOptions.overlap_chunks`` to an effective chunk count
+    (a divisor of the capacity C; < 2 means run the monolithic path)."""
+    ov = opts.overlap_chunks
+    if ov is None:
+        return 1
+    if ov < 0:
+        raise ValueError(
+            f"EPOptions.overlap_chunks must be None (off), 0 (auto) or "
+            f">= 1, got {ov}")
+    if ov == 0:
+        from repro.core import tuner
+        from repro.core.topology import PEAK_FLOPS_BF16
+        # 3 einsums x 2*rows*d*f flops over the full dispatch
+        compute_s = (6.0 * E_loc * (N_ep * C) * d * f
+                     / PEAK_FLOPS_BF16)
+        topo = mpix.topology_from_axes(ep)
+        ov = tuner.select_overlap_chunks(
+            topo, cfg.n_experts * C * d * itemsize, compute_s,
+            policy=opts.policy or mpix.get_default_policy())
+    ov = min(ov, C)
+    while ov > 1 and C % ov:
+        ov -= 1
+    return ov
+
+
+def _dispatch_overlapped(send, w_gate, w_up, w_down, *, chunks: int,
+                         ep, opts: EPOptions, act, N_ep: int,
+                         E_loc: int, C: int, d: int):
+    """Pipelined dispatch: the alltoall ships capacity chunks and each
+    arriving chunk immediately feeds the expert MLPs while the next
+    chunk is in flight (receive-side early-bird, MPIPCL §2.3).
+
+    The send buffer is reordered capacity-major within each destination
+    block so a row chunk is capacity slice ``i`` of EVERY local expert
+    — a full-width einsum's worth of work per chunk.  Chunk results
+    accumulate into the same [E_loc, N_ep, C, d] layout the monolithic
+    path produces; per-row MLPs contract only over ``d``, so chunking
+    is exact (not merely close)."""
+    Cc = C // chunks
+    x_cm = (send.reshape(N_ep, E_loc, C, d)
+            .transpose(0, 2, 1, 3).reshape(N_ep * C * E_loc, d))
+    acc = jnp.zeros((E_loc, N_ep, C, d),
+                    jnp.promote_types(send.dtype, w_down.dtype))
+
+    def consume(acc, y_c, i):
+        tok_c = (y_c.reshape(N_ep, Cc, E_loc, d)
+                 .transpose(2, 0, 1, 3).reshape(E_loc, N_ep * Cc, d))
+        h = mlp.ACT[act](jnp.einsum("ecd,edf->ecf", tok_c, w_gate))
+        h = h * jnp.einsum("ecd,edf->ecf", tok_c, w_up)
+        ye_c = jnp.einsum("ecf,efd->ecd", h, w_down)
+        return jax.lax.dynamic_update_slice_in_dim(
+            acc, ye_c.reshape(E_loc, N_ep, Cc, d).astype(acc.dtype),
+            i * Cc, axis=2)
+
+    return mpix.mpix_alltoall_overlap(
+        x_cm, ep, consume, acc, chunks=chunks,
+        algorithm=opts.alltoall, policy=opts.policy)
+
+
 def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
                    ep, opts: EPOptions, act):
     B, S, d = x.shape
@@ -122,17 +191,26 @@ def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
 
     # ship buckets to expert owners (expert e lives on rank e // E_loc)
     send = buckets[: E * C]                                   # [E*C, d]
-    recv = mpix.mpix_alltoall(send, ep, algorithm=opts.alltoall,
-                              policy=opts.policy)
-    tok = recv.reshape(N_ep, E_loc, C, d).transpose(1, 0, 2, 3) \
-              .reshape(E_loc, N_ep * C, d)
+    k_ov = _overlap_chunks(opts, cfg=cfg, ep=ep, E_loc=E_loc,
+                           N_ep=N_ep, C=C, d=d, f=w_gate.shape[2],
+                           itemsize=x.dtype.itemsize)
+    if k_ov >= 2:
+        ye4 = _dispatch_overlapped(send, w_gate, w_up, w_down,
+                                   chunks=k_ov, ep=ep, opts=opts,
+                                   act=act, N_ep=N_ep, E_loc=E_loc,
+                                   C=C, d=d)
+    else:
+        recv = mpix.mpix_alltoall(send, ep, algorithm=opts.alltoall,
+                                  policy=opts.policy)
+        tok = recv.reshape(N_ep, E_loc, C, d).transpose(1, 0, 2, 3) \
+                  .reshape(E_loc, N_ep * C, d)
 
-    h = mlp.ACT[act](jnp.einsum("ecd,edf->ecf", tok, w_gate))
-    h = h * jnp.einsum("ecd,edf->ecf", tok, w_up)
-    ye = jnp.einsum("ecf,efd->ecd", h, w_down)                # [E_loc,NC,d]
+        h = mlp.ACT[act](jnp.einsum("ecd,edf->ecf", tok, w_gate))
+        h = h * jnp.einsum("ecd,edf->ecf", tok, w_up)
+        ye = jnp.einsum("ecf,efd->ecd", h, w_down)            # [E_loc,NC,d]
+        ye4 = ye.reshape(E_loc, N_ep, C, d)
 
-    back = ye.reshape(E_loc, N_ep, C, d).transpose(1, 0, 2, 3) \
-             .reshape(N_ep * E_loc * C, d)
+    back = ye4.transpose(1, 0, 2, 3).reshape(N_ep * E_loc * C, d)
     ret = mpix.mpix_alltoall(back, ep, algorithm=opts.alltoall,
                              policy=opts.policy)
 

@@ -45,6 +45,13 @@ class TrainOptions:
     ep_policy: str | None = None       # selection policy for EP "auto"
                                        # collectives (None = process
                                        # default set by the launcher)
+    ep_overlap_chunks: int | None = None   # EPOptions.overlap_chunks:
+                                       # pipelined MoE dispatch (None =
+                                       # off, 0 = tuner-priced auto)
+    overlap_grad_chunks: int = 0       # explicit mode: > 0 pipelines
+                                       # grad sync as reduce-scatter /
+                                       # clip-on-shards / allgather in
+                                       # this many chunks (0 = off)
     remat: bool = True
     use_kernel: bool = False           # Pallas attention/wkv path
     peak_lr: float = 3e-4
@@ -98,18 +105,20 @@ def make_train_step(cfg, mesh, opts: TrainOptions) -> Callable:
         moe_dispatch = make_moe_dispatch(
             mesh, EPOptions(alltoall=opts.ep_alltoall,
                             capacity_factor=opts.ep_capacity,
-                            policy=opts.ep_policy),
+                            policy=opts.ep_policy,
+                            overlap_chunks=opts.ep_overlap_chunks),
             cfg.mlp_act)
     elif opts.moe_mode == "dropless" and cfg.moe is not None:
         moe_dispatch = lambda p, c, x: moe_mod.forward_dropless(
             p, c, x, cfg.mlp_act)
     loss = _loss_fn(cfg, opts, moe_dispatch)
 
-    def opt_apply(state, grads):
+    def opt_apply(state, grads, gnorm=None):
         lr = cosine_schedule(state["step"], peak_lr=opts.peak_lr,
                              warmup_steps=opts.warmup_steps,
                              total_steps=opts.total_steps)
-        grads, gnorm = clip_by_global_norm(grads, opts.max_grad_norm)
+        if gnorm is None:
+            grads, gnorm = clip_by_global_norm(grads, opts.max_grad_norm)
         params, opt = adamw_update(state["params"], grads, state["opt"],
                                    lr=lr, weight_decay=opts.weight_decay)
         return params, opt, gnorm, lr
@@ -131,6 +140,13 @@ def make_train_step(cfg, mesh, opts: TrainOptions) -> Callable:
     # global-mean gradient even under uneven label masking.
     sum_loss = _loss_fn(cfg, opts, moe_dispatch, reduction="sum_count")
 
+    # pipelined grad sync (reduce-scatter / clip-on-shards / allgather):
+    # the clip norm is computed on the scattered shards so the optimizer
+    # prologue overlaps the allgather.  Compression owns the DCN hop, so
+    # the two paths are mutually exclusive.
+    overlap = (opts.overlap_grad_chunks > 0
+               and not (opts.compress_dcn and "pod" in mesh.axis_names))
+
     def step(state, batch):
         def body(params, residual, batch):
             def local(p):
@@ -140,16 +156,22 @@ def make_train_step(cfg, mesh, opts: TrainOptions) -> Callable:
                 local, has_aux=True)(params)
             cnt_g = jax.lax.psum(cnt, d_axes)
             denom = jnp.maximum(cnt_g, 1).astype(jnp.float32)
+            gnorm = None
             if opts.compress_dcn and "pod" in mesh.axis_names:
                 grads, residual = sync.dp_allreduce_compressed(
                     grads, residual, intra_algorithm=opts.dp_algorithm,
                     denom=denom)
+            elif overlap:
+                grads, gnorm = sync.dp_allreduce_overlap(
+                    grads, d_axes, algorithm=opts.dp_algorithm,
+                    chunks=opts.overlap_grad_chunks, denom=denom,
+                    max_norm=opts.max_grad_norm)
             else:
                 grads = sync.dp_allreduce(
                     grads, d_axes, algorithm=opts.dp_algorithm,
                     buckets=opts.grad_buckets, denom=denom)
             lval = jax.lax.psum(lsum, d_axes) / denom
-            return lval, grads, residual
+            return lval, grads, residual, gnorm
 
         residual = state.get("ef_residual")
         shard = compat.shard_map(
@@ -161,10 +183,12 @@ def make_train_step(cfg, mesh, opts: TrainOptions) -> Callable:
             out_specs=(P(),
                        jax.tree.map(lambda _: P(), state["params"]),
                        (jax.tree.map(lambda _: P(), residual)
-                        if residual is not None else None)),
+                        if residual is not None else None),
+                       P() if overlap else None),
             check_vma=False)
-        lval, grads, residual = shard(state["params"], residual, batch)
-        params, opt, gnorm, lr = opt_apply(state, grads)
+        lval, grads, residual, gnorm = shard(state["params"], residual,
+                                             batch)
+        params, opt, gnorm, lr = opt_apply(state, grads, gnorm=gnorm)
         new = dict(state, params=params, opt=opt, step=state["step"] + 1)
         if residual is not None:
             new["ef_residual"] = residual

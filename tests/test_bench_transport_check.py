@@ -67,3 +67,34 @@ def test_committed_baseline_is_readable():
     schema (otherwise every CI run would now fail the trend step)."""
     committed = Path(__file__).resolve().parents[1] / "BENCH_transport.json"
     bench_transport.check_against(str(committed), GOOD_DATA)
+
+
+def test_check_lost_overlap_win_exits_nonzero(tmp_path):
+    """The makespan section is pure model output (machine-independent),
+    so a lost MoE-dispatch overlap win or an empty win count blocks."""
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"sim_exec": {"speedup": 8.0}}))
+    lost = dict(GOOD_DATA,
+                makespan={"strict_wins": 30,
+                          "moe_overlap": {"win": False}})
+    with pytest.raises(SystemExit):
+        bench_transport.check_against(str(base), lost)
+    dry = dict(GOOD_DATA,
+               makespan={"strict_wins": 0,
+                         "moe_overlap": {"win": True, "best_parts": 4,
+                                         "speedup": 1.4}})
+    with pytest.raises(SystemExit):
+        bench_transport.check_against(str(base), dry)
+
+
+def test_committed_baseline_has_makespan_wins():
+    """The committed artifact must record the PR 6 acceptance numbers:
+    >= 1 strict pipelined win over the corpus and a strict MoE-dispatch
+    compute-comm-overlap win."""
+    committed = Path(__file__).resolve().parents[1] / "BENCH_transport.json"
+    with open(committed) as fh:
+        data = json.load(fh)
+    mk = data["makespan"]
+    assert mk["strict_wins"] >= 1
+    assert mk["moe_overlap"]["win"] is True
+    assert mk["moe_overlap"]["speedup"] > 1.0

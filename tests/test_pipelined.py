@@ -1,0 +1,324 @@
+"""Makespan-aware pipelined execution (PR 6).
+
+Covers the pass-3 contract end to end on SimTransport:
+  * the makespan model never prices a packing above the armed serial
+    time plus registered compute (pointwise, every probe size),
+  * the tail-split move commits only when it helps and the committed
+    pipelined schedule stays bit-exact vs ``run_reference``,
+  * ``split_round``/``can_split`` legality, ``run_chunked`` chunking,
+    the partitioned entry-point validation, and the tuner's overlap
+    (chunk-count) section.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import executor, tuner
+from repro.core.algorithms import REGISTRY
+from repro.core.algorithms import partitioned as pc
+from repro.core.plan import CommGraph, build_plan
+from repro.core.schedule import (CommSchedule, ComputeEvent, NotApplicable,
+                                 can_split, split_round)
+from repro.core.topology import Topology, flat_topology, torus_topology
+from repro.core.transport import SimTransport
+
+
+@pytest.fixture(autouse=True)
+def _fresh_executor_cache():
+    executor.clear_cache()
+    yield
+    executor.clear_cache()
+
+
+TOPOS = {
+    "flat": flat_topology(8),
+    "2pod": Topology(8, 4),
+    "3lvl": torus_topology(2, 2, 2),
+}
+PROBES = (1.0, 4096.0, float(1 << 20))
+
+
+def _corpus(topo):
+    out = []
+    for coll, algos in REGISTRY.items():
+        for name, builder in algos.items():
+            try:
+                out.append((f"{coll}.{name}", builder(topo)))
+            except NotApplicable:
+                continue
+    return out
+
+
+def _with_event(sched, topo, *, parts=4):
+    """Attach one splittable consumer-compute event after the last
+    round, sized to the schedule's own serial cost (the regime where
+    overlap pays)."""
+    ev_s = sched.modeled_time(topo, 4096.0)
+    ev = ComputeEvent("consumer", ev_s, after_round=-1,
+                      splittable=True, parts=parts)
+    return dataclasses.replace(sched, compute_events=(ev,))
+
+
+# ---------------------------------------------------------------------------
+# ComputeEvent / split_round units
+# ---------------------------------------------------------------------------
+
+
+def test_compute_event_validation():
+    with pytest.raises(ValueError):
+        ComputeEvent("x", -1.0)
+    with pytest.raises(ValueError):
+        ComputeEvent("x", 1.0, after_round=-2)
+    with pytest.raises(ValueError):
+        ComputeEvent("x", 1.0, parts=-1)
+    sched = REGISTRY["allgather"]["ring"](flat_topology(8))
+    # out-of-range anchors trip schedule validation (assert-based, like
+    # the other schedule invariants; always on in the test suite)
+    with pytest.raises(AssertionError):
+        dataclasses.replace(
+            sched, compute_events=(
+                ComputeEvent("x", 1.0,
+                             after_round=len(sched.rounds)),))
+
+
+def test_split_round_legality_and_semantics():
+    topo = flat_topology(8)
+    sched = REGISTRY["allgather"]["bruck"](topo)
+    tail = sched.rounds[-1]
+    assert tail.k >= 2 and can_split(tail, 2)
+    chunks = split_round(tail, 2)
+    assert len(chunks) == 2 and sum(c.k for c in chunks) == tail.k
+    # chunks run sequentially == the unsplit round, bit-exact
+    split = dataclasses.replace(
+        sched, rounds=sched.rounds[:-1] + chunks)
+    tr = SimTransport(8)
+    rng = np.random.default_rng(0)
+    buf = rng.integers(-8, 8, (8, sched.num_slots, 3)).astype(np.float32)
+    assert np.array_equal(tr.run_reference(sched, buf),
+                          tr.run_reference(split, buf))
+    # illegal splits refuse
+    assert not can_split(tail, 3) or tail.k % 3 == 0
+    red = REGISTRY["allreduce"]["recursive_halving_doubling"](topo)
+    first_red = next(r for r in red.rounds if r.reduce)
+    assert not can_split(first_red, 2)
+    with pytest.raises(AssertionError):
+        split_round(first_red, 2)
+
+
+def test_event_fingerprint_sensitivity():
+    sched = REGISTRY["allgather"]["ring"](flat_topology(8))
+    ev = ComputeEvent("mlp", 1e-3, after_round=-1, splittable=True,
+                      parts=4)
+    a = dataclasses.replace(sched, compute_events=(ev,))
+    b = dataclasses.replace(
+        sched, compute_events=(dataclasses.replace(ev, seconds=2e-3),))
+    assert sched.fingerprint() != a.fingerprint()
+    assert a.fingerprint() != b.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# makespan model
+# ---------------------------------------------------------------------------
+
+
+def test_makespan_requires_armed_executor():
+    sched = REGISTRY["allgather"]["ring"](flat_topology(8))
+    free = executor.get_executor(sched)
+    with pytest.raises(RuntimeError):
+        free.makespan(4096.0)
+    with pytest.raises(RuntimeError):
+        free.chunked_makespan(4096.0, 2, 1e-3)
+
+
+def test_makespan_chain_and_split_wins_corpus():
+    """Acceptance: over the full registry x {flat, 2-pod, 3-level}
+    corpus with a splittable consumer event, the packed makespan is
+    <= armed serial + compute at EVERY probe size, committed tail
+    splits produce a strict win at some probe, and every committed
+    pipelined schedule is bit-exact vs run_reference."""
+    rng = np.random.default_rng(3)
+    wins = 0
+    for topo in TOPOS.values():
+        tr = SimTransport(topo.nranks)
+        for label, base in _corpus(topo):
+            sched = _with_event(base, topo)
+            ex = executor.get_executor(sched, topo=topo)
+            ev_s = sum(e.seconds for e in sched.compute_events)
+            strict = False
+            for s in PROBES:
+                mk = ex.makespan(s)
+                serial = (ex.compiled_schedule.modeled_time(topo, s)
+                          + ev_s)
+                assert mk <= serial * (1 + 1e-9), (label, s, mk, serial)
+                strict = strict or mk < serial * (1 - 1e-9)
+            if ex.pipeline_tail_parts >= 2:
+                assert strict, label
+                wins += 1
+                buf = rng.integers(-8, 8, (topo.nranks,
+                                           sched.num_slots, 2)
+                                   ).astype(np.float32)
+                assert np.array_equal(
+                    tr.run_reference(base, buf),
+                    tr.run_reference(ex.pipelined_schedule, buf)), label
+    assert wins >= 10, wins
+
+
+def test_makespan_no_events_never_above_serial():
+    topo = Topology(8, 4)
+    for label, sched in _corpus(topo):
+        ex = executor.get_executor(sched, topo=topo)
+        for s in PROBES:
+            assert (ex.makespan(s)
+                    <= ex.compiled_schedule.modeled_time(topo, s)
+                    * (1 + 1e-9)), (label, s)
+
+
+def test_makespan_on_neighbor_plan():
+    topo = Topology(8, 4)
+    graph = CommGraph.random(8, n_local=6, degree=4,
+                             rng=np.random.default_rng(7), dup_frac=0.8)
+    plan = build_plan(graph, topo, aggregate=True)
+    assert 0.0 < plan.makespan() <= plan.modeled_time() * (1 + 1e-9)
+
+
+def test_chunked_makespan_model():
+    """Closed-form row-chunk pipeline: parts=1 is serial + compute;
+    with compute comparable to the wire time, some parts >= 2 wins at
+    beta-dominated sizes (the overlap headroom the tuner prices)."""
+    topo = Topology(8, 4)
+    sched = REGISTRY["alltoall"]["hierarchical"](topo)
+    ex = executor.get_executor(sched, topo=topo)
+    big = float(1 << 20)
+    serial = ex.compiled_schedule.modeled_time(topo, big)
+    compute = serial                       # balanced pipeline regime
+    assert ex.chunked_makespan(big, 1, compute) == pytest.approx(
+        serial + compute)
+    best = min(ex.chunked_makespan(big, p, compute)
+               for p in (2, 4, 8))
+    assert best < (serial + compute) * (1 - 1e-3)
+    # alpha-dominated sizes: chunking only adds latency, p1 stays best
+    small = 8.0
+    s_serial = ex.compiled_schedule.modeled_time(topo, small)
+    assert all(ex.chunked_makespan(small, p, 0.0)
+               >= s_serial * (1 - 1e-12) for p in (1, 2, 4, 8))
+
+
+def test_executor_stats_pipeline_fields():
+    topo = flat_topology(8)
+    sched = _with_event(REGISTRY["allgather"]["bruck"](topo), topo)
+    ex = executor.get_executor(sched, topo=topo)
+    st = ex.stats()
+    assert st["pipeline_groups"] >= 1
+    assert st["pipeline_packed_rounds"] >= len(ex.compiled_schedule.rounds)
+    assert st["pipeline_tail_parts"] == ex.pipeline_tail_parts
+
+
+# ---------------------------------------------------------------------------
+# run_chunked (SimTransport)
+# ---------------------------------------------------------------------------
+
+
+def test_run_chunked_bit_identical_and_fold():
+    topo = Topology(8, 4)
+    rng = np.random.default_rng(1)
+    for label, sched in _corpus(topo)[:8]:
+        tr = SimTransport(8)
+        buf = rng.integers(-8, 8, (8, sched.num_slots, 8, 3)
+                           ).astype(np.float32)
+        whole = tr.run(sched, buf)
+        for chunks in (1, 2, 4):
+            assert np.array_equal(
+                tr.run_chunked(sched, buf, chunks=chunks), whole), (
+                label, chunks)
+        # early-bird fold: running sum over chunk outputs == whole sum
+        got = tr.run_chunked(
+            sched, buf, chunks=4,
+            consume=lambda c, out, i: c + out.sum(axis=2),
+            init=np.zeros((8, sched.num_slots, 3), np.float32))
+        np.testing.assert_allclose(got, whole.sum(axis=2), atol=1e-4)
+
+
+def test_run_chunked_validation():
+    sched = REGISTRY["allgather"]["ring"](flat_topology(8))
+    tr = SimTransport(8)
+    buf = np.zeros((8, sched.num_slots, 6), np.float32)
+    with pytest.raises(ValueError):
+        tr.run_chunked(sched, buf, chunks=0)
+    with pytest.raises(ValueError):
+        tr.run_chunked(sched, buf, chunks=4)     # 6 % 4 != 0
+
+
+# ---------------------------------------------------------------------------
+# partitioned entry-point validation (mpix_* satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_partitioned_validation():
+    perm8 = [(i, (i + 1) % 8) for i in range(8)]
+    with pytest.raises(ValueError):
+        pc.partitioned_schedule(8, perm8, 0)
+    with pytest.raises(ValueError):
+        pc.partitioned_schedule(8, perm8, -2)
+    x = jnp.zeros((12, 4), jnp.float32)
+    perm = [(i, (i + 1) % 4) for i in range(4)]
+    with pytest.raises(ValueError):
+        pc.partitioned_ppermute(x, "data", perm, 0)
+    with pytest.raises(ValueError):
+        pc.partitioned_ppermute(x, "data", perm, 5)   # 12 % 5 != 0
+
+
+def test_alltoall_overlap_validation():
+    from repro.core import api as mpix
+    topo = flat_topology(4)
+    x = jnp.zeros((4 * 6, 3), jnp.float32)
+    with pytest.raises(ValueError):
+        mpix.mpix_alltoall_overlap(
+            jnp.zeros((9, 3)), ("data",), lambda c, o, i: o, None,
+            chunks=1, topo=topo)
+    with pytest.raises(ValueError):
+        mpix.mpix_alltoall_overlap(x, ("data",), lambda c, o, i: o,
+                                   None, chunks=-1, topo=topo)
+    with pytest.raises(ValueError):
+        mpix.mpix_alltoall_overlap(x, ("data",), lambda c, o, i: o,
+                                   None, chunks=4, topo=topo)  # 6 % 4
+
+
+def test_dp_allreduce_overlap_validation():
+    from repro.train import sync
+    with pytest.raises(ValueError):
+        sync.dp_allreduce_overlap({"a": jnp.zeros((4,))}, ("data",),
+                                  chunks=0)
+
+
+# ---------------------------------------------------------------------------
+# tuner overlap (chunk-count) section
+# ---------------------------------------------------------------------------
+
+
+def test_select_overlap_chunks_policies():
+    topo = Topology(8, 4)
+    # fixed policy: always the monolithic fallback
+    assert tuner.select_overlap_chunks(topo, 1 << 20, 1.0,
+                                       policy="fixed") == 1
+    # model policy, beta-dominated size + real compute: chunking wins
+    big = tuner.select_overlap_chunks(topo, 64 << 20, 1.0,
+                                      policy="model")
+    assert big >= 2
+    # tiny message, no compute: never worse than serial -> p1
+    assert tuner.select_overlap_chunks(topo, 64, 0.0,
+                                       policy="model") == 1
+
+
+def test_tune_overlap_table_shape():
+    topo = Topology(8, 4)
+    table = tuner.tune_overlap(topo, sizes=(1 << 14, 1 << 22))
+    assert set(table) == {"14", "22"}       # log2 bucket keys
+    for rec in table.values():
+        assert set(rec["times"]) == {f"p{p}"
+                                     for p in tuner._OVERLAP_PARTS}
+        assert rec["best"] in rec["times"]
+        assert rec["times"][rec["best"]] <= rec["times"]["p1"] * (
+            1 + 1e-9)

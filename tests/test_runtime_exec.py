@@ -1,0 +1,133 @@
+"""Runtime x pipelined-executor integration.
+
+A slow link changes the *model* (makespan degrades monotonically, the
+straggler monitor flags the host) but never the *math* — execution and
+``run_reference`` stay bit-exact on any topology.  A preemption mid-run
+resumes from checkpoint to the bit-identical final state even when the
+step function executes the committed pipelined schedule.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import executor
+from repro.core.algorithms import REGISTRY
+from repro.core.schedule import ComputeEvent
+from repro.core.topology import (DCN_LINK, ICI_LINK, LinkModel, TopoLevel,
+                                 Topology)
+from repro.core.transport import SimTransport
+from repro.runtime.fault import FaultTolerantLoop, PreemptionSignal
+from repro.runtime.straggler import StragglerMonitor
+
+
+@pytest.fixture(autouse=True)
+def _fresh_executor_cache():
+    executor.clear_cache()
+    yield
+    executor.clear_cache()
+
+
+def _two_pod(dcn_beta_scale: float) -> Topology:
+    slow = LinkModel(alpha=DCN_LINK.alpha,
+                     beta=DCN_LINK.beta * dcn_beta_scale)
+    return Topology.from_levels([
+        TopoLevel("dcn", 2, slow, dcn=True),
+        TopoLevel("ici", 4, ICI_LINK),
+    ])
+
+
+def _armed(topo, *, splittable=True):
+    base = REGISTRY["allgather"]["hierarchical"](topo)
+    ev = ComputeEvent("mlp", base.modeled_time(topo, 4096.0),
+                      after_round=-1, splittable=splittable, parts=4)
+    sched = dataclasses.replace(base, compute_events=(ev,))
+    return sched, executor.get_executor(sched, topo=topo)
+
+
+def test_slow_link_degrades_makespan_monotonically():
+    slot = float(1 << 20)
+    mks = []
+    for scale in (1.0, 4.0, 16.0):
+        sched, ex = _armed(_two_pod(scale))
+        mks.append(ex.makespan(slot))
+        # the chain holds on every topology, slow links included
+        ev_s = sum(e.seconds for e in sched.compute_events)
+        assert mks[-1] <= (ex.compiled_schedule.modeled_time(
+            _two_pod(scale), slot) + ev_s) * (1 + 1e-9)
+    assert mks[0] < mks[1] < mks[2], mks
+
+
+def test_slow_link_never_changes_the_math():
+    rng = np.random.default_rng(0)
+    base_sched, base_ex = _armed(_two_pod(1.0))
+    buf = rng.integers(-8, 8, (8, base_sched.num_slots, 2)
+                       ).astype(np.float32)
+    tr = SimTransport(8)
+    want = tr.run_reference(base_sched, buf)
+    for scale in (4.0, 16.0):
+        sched, ex = _armed(_two_pod(scale))
+        assert np.array_equal(ex.run_sim(buf), want)
+        if ex.pipelined_schedule is not None:
+            assert np.array_equal(
+                tr.run_reference(ex.pipelined_schedule, buf), want)
+
+
+def test_straggler_monitor_flags_slow_pod_host():
+    """Feed the monitor per-host step times derived from the makespan
+    model: hosts on the degraded topology run the same pipelined step
+    slower, get flagged past the threshold, and their data shard moves
+    to a fast host."""
+    slot = float(1 << 20)
+    _, fast_ex = _armed(_two_pod(1.0))
+    _, slow_ex = _armed(_two_pod(16.0))
+    t_fast, t_slow = fast_ex.makespan(slot), slow_ex.makespan(slot)
+    assert t_slow > 1.5 * t_fast
+    mon = StragglerMonitor(num_hosts=4, threshold=1.5)
+    for step in range(6):
+        for h in range(3):
+            mon.record(h, t_fast * (1 + 0.01 * step))
+        mon.record(3, t_slow)
+    assert mon.stragglers() == [3]
+    assign = mon.rebalance()
+    assert assign[3] == [] and sorted(
+        s for shards in assign.values() for s in shards) == [0, 1, 2, 3]
+
+
+def test_fault_resume_pipelined_step_bit_exact(tmp_path):
+    """Preempt a loop whose step executes the committed pipelined
+    schedule; resuming from the checkpoint reproduces the uninterrupted
+    run bit-for-bit (exactly-once recovery on the hot path)."""
+    topo = _two_pod(1.0)
+    sched, ex = _armed(topo)
+    assert ex.pipeline_tail_parts >= 2      # the split actually commits
+    pipelined = ex.pipelined_schedule
+    tr = SimTransport(8)
+    rng = np.random.default_rng(1)
+    init = {"buf": rng.normal(size=(8, sched.num_slots, 2)
+                              ).astype(np.float32)}
+
+    def step_fn(state, step):
+        out = tr.run_reference(pipelined, state["buf"])
+        return {"buf": (0.5 * out + float(step)).astype(np.float32)}
+
+    # uninterrupted oracle
+    ref = dict(init)
+    for s in range(6):
+        ref = step_fn(ref, s)
+
+    loop = FaultTolerantLoop(tmp_path, ckpt_every=100)
+    sig = loop.preemption
+    state, stopped = loop.run(
+        init, step_fn, start_step=0, num_steps=6,
+        on_step=lambda step, st: sig.trigger() if step == 3 else None)
+    assert stopped == 3
+
+    loop2 = FaultTolerantLoop(tmp_path, ckpt_every=100,
+                              preemption=PreemptionSignal())
+    state2, start = loop2.resume_or_init(init)
+    assert start == 3
+    final, done = loop2.run(state2, step_fn, start_step=start,
+                            num_steps=6 - start)
+    assert done == 6
+    assert np.array_equal(final["buf"], ref["buf"])

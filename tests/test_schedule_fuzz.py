@@ -42,7 +42,7 @@ import dataclasses
 import math
 
 from repro.core import executor
-from repro.core.schedule import CommRound, CommSchedule
+from repro.core.schedule import CommRound, CommSchedule, ComputeEvent
 from repro.core.topology import Topology, flat_topology, torus_topology
 from repro.core.transport import SimTransport
 
@@ -118,6 +118,25 @@ def rand_schedule(rng, n: int) -> CommSchedule:
                         local_post=local_post)
 
 
+def rand_events(rng, nrounds: int) -> tuple:
+    """0–3 random compute events: anchors span the whole schedule
+    (``-1`` = after the last round), seconds span alpha-to-beta
+    magnitudes, and ~half are splittable so the tail-split move fires
+    when legality lines up."""
+    if rng.random() < 0.5:
+        return ()
+    out = []
+    for i in range(int(rng.integers(1, 4))):
+        anchor = -1 if rng.random() < 0.5 else int(
+            rng.integers(0, nrounds))
+        out.append(ComputeEvent(
+            f"ev{i}", float(10.0 ** rng.uniform(-7, -2)),
+            after_round=anchor,
+            splittable=bool(rng.random() < 0.5),
+            parts=int(rng.choice([0, 2, 4]))))
+    return tuple(out)
+
+
 # ---------------------------------------------------------------------------
 # the metamorphic core
 # ---------------------------------------------------------------------------
@@ -139,6 +158,7 @@ def check_conformance(sched: CommSchedule, topo: Topology, rng) -> None:
     assert np.array_equal(want, free.run_sim(buf))
     assert np.array_equal(want, plain.run_sim(buf))
     # cost safety at every probe size: armed <= topology-free <= original
+    ev_s = sum(e.seconds for e in sched.compute_events)
     for s in _PROBE_SLOT_BYTES:
         t_orig = sched.modeled_time(topo, s)
         t_free = free.compiled_schedule.modeled_time(topo, s)
@@ -147,6 +167,15 @@ def check_conformance(sched: CommSchedule, topo: Topology, rng) -> None:
         assert t_free <= t_orig * tol, (s, t_free, t_orig)
         assert t_armed <= t_free * tol, (s, t_armed, t_free)
         assert t_armed <= t_orig * tol, (s, t_armed, t_orig)
+        # pipelined pass 3: any packing (split or not) never prices
+        # above the armed serial chain plus the registered compute
+        assert armed.makespan(s) <= (t_armed + ev_s) * tol, (
+            s, armed.makespan(s), t_armed, ev_s)
+    # a committed tail split must stay an execution no-op (bit-exact)
+    if armed.pipelined_schedule is not None:
+        assert armed.pipeline_tail_parts >= 2
+        assert np.array_equal(
+            want, tr.run_reference(armed.pipelined_schedule, buf))
 
 
 def check_fingerprint_roundtrip(sched: CommSchedule) -> None:
@@ -191,6 +220,29 @@ def test_fuzzed_schedules_conform(seed):
     topo = rand_topology(rng)
     sched = rand_schedule(rng, topo.nranks)
     check_conformance(sched, topo, rng)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fuzzed_event_schedules_makespan_safe(seed):
+    """Random schedule + random compute events: the makespan chain
+    (packed <= armed serial + compute, pointwise) and tail-split
+    bit-exactness hold under fuzzing, and attaching events never
+    perturbs execution (they are model-only)."""
+    rng = np.random.default_rng(seed)
+    topo = rand_topology(rng)
+    base = rand_schedule(rng, topo.nranks)
+    sched = dataclasses.replace(
+        base, compute_events=rand_events(rng, len(base.rounds)))
+    check_conformance(sched, topo, rng)
+    if sched.compute_events:
+        # events change identity (cache key) but not results
+        assert sched.fingerprint() != base.fingerprint()
+        buf = rng.integers(-8, 8, (topo.nranks, sched.num_slots, 2)
+                           ).astype(np.float32)
+        a = executor.compile_schedule(sched, optimize=True, topo=topo)
+        b = executor.compile_schedule(base, optimize=True, topo=topo)
+        assert np.array_equal(a.run_sim(buf), b.run_sim(buf))
 
 
 @settings(max_examples=25, deadline=None)

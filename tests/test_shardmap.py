@@ -69,6 +69,16 @@ def test_distributed_train_paths():
 
 
 @pytest.mark.slow
+def test_pipelined_overlap_paths():
+    """Compute-comm overlap hot paths (PR 6): chunked shard_map
+    transport, mpix_alltoall_overlap, MoE dispatch overlap, grad-sync
+    overlap in the explicit train step, and the serve prefill EP
+    wiring — all equivalent to their unpipelined oracles."""
+    out = run_script("check_overlap.py")
+    assert "ALL OK" in out
+
+
+@pytest.mark.slow
 def test_multi_pod_dryrun_cells():
     out = run_script("check_dryrun_cell.py")
     assert "ALL OK" in out
