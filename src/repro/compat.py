@@ -16,12 +16,20 @@ feature-testing jax inline.
                             an ambient-mesh concept (every shard_map here
                             carries its mesh explicitly, so nothing is
                             lost).
+  * ``pallas_interpret()`` — re-export of the kernels-layer shim: should
+                            Pallas kernels (including the device-side
+                            ``PallasTransport``) run under the Pallas
+                            interpreter?  ``REPRO_PALLAS_INTERPRET=1``
+                            forces on, ``0`` forces off, unset auto-ons
+                            when no TPU backs the default backend.
 """
 from __future__ import annotations
 
 import contextlib
 
 import jax
+
+from repro.kernels.compat import pallas_interpret  # noqa: F401 (re-export)
 
 
 def axis_size(name) -> int:

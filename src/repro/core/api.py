@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.topology import (DCN_LINK, ICI_LINK, TopoLevel, Topology)
-from repro.core.transport import ShardMapTransport, _flat_rank
+from repro.core.transport import (PallasTransport, ShardMapTransport,
+                                  _flat_rank)
 from repro.core import selector
 from repro.core.algorithms import REGISTRY
 
@@ -140,6 +141,39 @@ def _resolve(collective: str, algorithm: str, topo: Topology, nbytes: int,
     return algorithm, _schedule(collective, algorithm, topo)
 
 
+# Transport substrates selectable per call: "shardmap" (one ppermute per
+# compiled round), "pallas" (whole schedule as one device-side kernel;
+# see core.pallas_lowering), or "auto" (the tuner's ``transport`` policy
+# cell prices the two per size bucket).
+TRANSPORTS = ("shardmap", "pallas", "auto")
+
+
+def _check_transport(transport: str) -> None:
+    """Name check only — callable before any axis/topology resolution,
+    so a typo'd transport fails loudly even outside shard_map."""
+    if transport not in TRANSPORTS:
+        raise ValueError(f"unknown transport {transport!r}; "
+                         f"expected one of {TRANSPORTS}")
+
+
+def _resolve_transport(transport: str, topo: Topology, nbytes: int,
+                       policy: str | None = None) -> str:
+    """Validate + resolve a transport name to a concrete substrate."""
+    _check_transport(transport)
+    if transport == "auto":
+        from repro.core import tuner  # local: avoid import cycle
+        transport = tuner.select_transport(
+            topo, nbytes, policy=policy or _DEFAULT_POLICY)
+    return transport
+
+
+def _make_transport(transport: str, topo: Topology, names, nbytes: int,
+                    policy: str | None = None):
+    kind = _resolve_transport(transport, topo, nbytes, policy)
+    cls = PallasTransport if kind == "pallas" else ShardMapTransport
+    return cls(topo.nranks, names, topo=topo)
+
+
 def _pad_to(x: jax.Array, mult: int):
     flat = x.reshape(-1)
     rem = (-flat.size) % mult
@@ -153,45 +187,57 @@ def _pad_to(x: jax.Array, mult: int):
 
 def mpix_allgather(x: jax.Array, axis_names, *, algorithm: str = "auto",
                    policy: str | None = None,
-                   topo: Topology | None = None) -> jax.Array:
+                   topo: Topology | None = None,
+                   transport: str = "shardmap") -> jax.Array:
     """Tiled allgather of the local shard along its leading dim."""
     names = _axes_tuple(axis_names)
+    _check_transport(transport)
     topo = topo or topology_from_axes(names)
-    algorithm, sched = _resolve("allgather", algorithm, topo,
-                                x.size * x.dtype.itemsize, policy)
+    nbytes = x.size * x.dtype.itemsize
+    tr = _make_transport(transport, topo, names, nbytes, policy)
+    algorithm, sched = _resolve("allgather", algorithm, topo, nbytes,
+                                policy)
     if algorithm == "xla":
         return jax.lax.all_gather(x, names, tiled=True)
     n = topo.nranks
     buf = jnp.zeros((n,) + x.shape, x.dtype)
     buf = buf.at[_flat_rank(names)].set(x)
-    out = ShardMapTransport(n, names, topo=topo).run(sched, buf)
+    out = tr.run(sched, buf)
     return out.reshape((n * x.shape[0],) + x.shape[1:])
 
 
 def mpix_allreduce(x: jax.Array, axis_names, *, algorithm: str = "auto",
                    policy: str | None = None,
-                   topo: Topology | None = None) -> jax.Array:
+                   topo: Topology | None = None,
+                   transport: str = "shardmap") -> jax.Array:
     names = _axes_tuple(axis_names)
+    _check_transport(transport)
     topo = topo or topology_from_axes(names)
-    algorithm, sched = _resolve("allreduce", algorithm, topo,
-                                x.size * x.dtype.itemsize, policy)
+    nbytes = x.size * x.dtype.itemsize
+    tr = _make_transport(transport, topo, names, nbytes, policy)
+    algorithm, sched = _resolve("allreduce", algorithm, topo, nbytes,
+                                policy)
     if algorithm == "xla":
         return jax.lax.psum(x, names)
     n = topo.nranks
     flat = _pad_to(x, n)
-    out = ShardMapTransport(n, names, topo=topo).run(sched, flat.reshape(n, -1))
+    out = tr.run(sched, flat.reshape(n, -1))
     return out.reshape(-1)[: x.size].reshape(x.shape)
 
 
 def mpix_reduce_scatter(x: jax.Array, axis_names, *,
                         algorithm: str = "auto",
                         policy: str | None = None,
-                        topo: Topology | None = None) -> jax.Array:
+                        topo: Topology | None = None,
+                        transport: str = "shardmap") -> jax.Array:
     """Reduce along axes; scatter over the leading dim (must divide)."""
     names = _axes_tuple(axis_names)
+    _check_transport(transport)
     topo = topo or topology_from_axes(names)
-    algorithm, sched = _resolve("reduce_scatter", algorithm, topo,
-                                x.size * x.dtype.itemsize, policy)
+    nbytes = x.size * x.dtype.itemsize
+    tr = _make_transport(transport, topo, names, nbytes, policy)
+    algorithm, sched = _resolve("reduce_scatter", algorithm, topo, nbytes,
+                                policy)
     if algorithm == "xla":
         return jax.lax.psum_scatter(x, names, scatter_dimension=0,
                                     tiled=True)
@@ -202,19 +248,23 @@ def mpix_reduce_scatter(x: jax.Array, axis_names, *,
             f"shape {tuple(x.shape)} must be divisible by nranks={n} "
             f"(one scatter block per rank)")
     blocks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
-    out = ShardMapTransport(n, names, topo=topo).run(sched, blocks)
+    out = tr.run(sched, blocks)
     return out[_flat_rank(names)]
 
 
 def mpix_alltoall(x: jax.Array, axis_names, *, algorithm: str = "auto",
                   policy: str | None = None,
-                  topo: Topology | None = None) -> jax.Array:
+                  topo: Topology | None = None,
+                  transport: str = "shardmap") -> jax.Array:
     """Alltoall over the leading dim: in block d = data for rank d;
     out block s = data from rank s.  Leading dim must divide by nranks."""
     names = _axes_tuple(axis_names)
+    _check_transport(transport)
     topo = topo or topology_from_axes(names)
-    algorithm, sched = _resolve("alltoall", algorithm, topo,
-                                x.size * x.dtype.itemsize, policy)
+    nbytes = x.size * x.dtype.itemsize
+    tr = _make_transport(transport, topo, names, nbytes, policy)
+    algorithm, sched = _resolve("alltoall", algorithm, topo, nbytes,
+                                policy)
     n = topo.nranks
     if x.shape[0] % n:
         raise ValueError(
@@ -230,7 +280,7 @@ def mpix_alltoall(x: jax.Array, axis_names, *, algorithm: str = "auto",
     if sched.num_blocks > n:  # schedules with a separate recv region
         pad = jnp.zeros((sched.num_blocks - n,) + blocks.shape[1:], x.dtype)
         blocks = jnp.concatenate([blocks, pad], axis=0)
-    out = ShardMapTransport(n, names, topo=topo).run(sched, blocks)
+    out = tr.run(sched, blocks)
     return out[: sched.result_blocks].reshape(x.shape)
 
 
@@ -238,7 +288,8 @@ def mpix_alltoall_overlap(x: jax.Array, axis_names, consume, init, *,
                           chunks: int = 0, compute_s: float = 0.0,
                           algorithm: str = "auto",
                           policy: str | None = None,
-                          topo: Topology | None = None):
+                          topo: Topology | None = None,
+                          transport: str = "shardmap"):
     """Partitioned (pipelined) alltoall: the exchange runs in row
     chunks and each chunk's output is folded through
     ``consume(carry, out_chunk, i) -> carry`` as soon as it lands, so
@@ -254,7 +305,10 @@ def mpix_alltoall_overlap(x: jax.Array, axis_names, consume, init, *,
     call — always a legal fallback.  Explicit ``chunks>1`` must divide
     the per-block row count."""
     names = _axes_tuple(axis_names)
+    _check_transport(transport)
     topo = topo or topology_from_axes(names)
+    nbytes = x.size * x.dtype.itemsize
+    tr = _make_transport(transport, topo, names, nbytes, policy)
     n = topo.nranks
     if x.shape[0] % n:
         raise ValueError(
@@ -278,10 +332,11 @@ def mpix_alltoall_overlap(x: jax.Array, axis_names, consume, init, *,
             f"be divisible by chunks={chunks}")
     if chunks <= 1:
         return consume(init, mpix_alltoall(x, names, algorithm=algorithm,
-                                           policy=policy, topo=topo), 0)
+                                           policy=policy, topo=topo,
+                                           transport=transport), 0)
     rc = rows // chunks
-    algorithm, sched = _resolve("alltoall", algorithm, topo,
-                                x.size * x.dtype.itemsize, policy)
+    algorithm, sched = _resolve("alltoall", algorithm, topo, nbytes,
+                                policy)
     if algorithm == "xla":
         blocks = x.reshape((n, chunks, rc) + x.shape[1:])
 
@@ -301,7 +356,6 @@ def mpix_alltoall_overlap(x: jax.Array, axis_names, consume, init, *,
         pad = jnp.zeros((sched.num_blocks - n,) + blocks.shape[1:],
                         x.dtype)
         blocks = jnp.concatenate([blocks, pad], axis=0)
-    tr = ShardMapTransport(n, names, topo=topo)
 
     def fold(carry, out_c, i):
         out = (out_c[: sched.result_blocks]
@@ -335,19 +389,62 @@ def make_neighbor_plan(graph, topo: Topology, *,
                       else elem_bytes)
 
 
-def mpix_neighbor_alltoallv(x: jax.Array, axis_names, plan) -> jax.Array:
+def mpix_neighbor_alltoallv(x: jax.Array, axis_names, plan, *,
+                            transport: str = "shardmap") -> jax.Array:
     """Execute a compiled ``NeighborPlan`` (call inside shard_map).
 
     ``x`` is this rank's [n_local_max, feat] value rows; returns
     [n_recv_max, feat] (rows past this rank's recv size are zeros)."""
     from repro.core.plan import run_shardmap
-    return run_shardmap(plan, x, _axes_tuple(axis_names))
+    kind = _resolve_transport(transport, plan.topo,
+                              x.size * x.dtype.itemsize)
+    return run_shardmap(plan, x, _axes_tuple(axis_names), transport=kind)
+
+
+# ---------------------------------------------------------------------------
+# compute-fused terminal rounds
+# ---------------------------------------------------------------------------
+
+
+def mpix_allreduce_rmsnorm(x: jax.Array, axis_names, scale: jax.Array, *,
+                           eps: float = 1e-6, gemma_style: bool = False,
+                           algorithm: str = "auto",
+                           policy: str | None = None,
+                           topo: Topology | None = None,
+                           transport: str = "pallas") -> jax.Array:
+    """Allreduce ``x`` over ``axis_names``, then rmsnorm the result —
+    with the reduction's terminal round fused INTO the rmsnorm kernel.
+
+    On the pallas transport the partial activations are combined with a
+    single ``all_gather`` and the summation happens inside the rmsnorm
+    Pallas kernel itself (``kernels.rmsnorm.rmsnorm_allreduce``): the
+    reduced tensor is never materialized in HBM, saving one full
+    write+read round trip vs allreduce-then-normalize (the modeled win
+    gated in BENCH_transport.json).  ``x`` is [..., d] with rmsnorm over
+    the last dim; summation is in f32 regardless of dtype, so results
+    match psum+rmsnorm to float tolerance (NOT bit-exact — the add
+    order differs from a ring reduction's).  On "shardmap" it falls
+    back to ``mpix_allreduce`` followed by the plain kernel."""
+    names = _axes_tuple(axis_names)
+    topo = topo or topology_from_axes(names)
+    from repro.kernels.rmsnorm import ops as rms_ops
+    kind = _resolve_transport(transport, topo, x.size * x.dtype.itemsize,
+                              policy)
+    if kind == "pallas":
+        parts = jax.lax.all_gather(
+            x, names if len(names) > 1 else names[0])
+        parts = parts.reshape((topo.nranks,) + x.shape)
+        return rms_ops.rmsnorm_allreduce(parts, scale, eps, gemma_style)
+    y = mpix_allreduce(x, names, algorithm=algorithm, policy=policy,
+                       topo=topo)
+    return rms_ops.rmsnorm(y, scale, eps, gemma_style)
 
 
 __all__ = [
     "mpix_allgather", "mpix_allreduce", "mpix_reduce_scatter",
-    "mpix_alltoall", "mpix_alltoall_overlap",
+    "mpix_alltoall", "mpix_alltoall_overlap", "mpix_allreduce_rmsnorm",
     "mpix_neighbor_alltoallv", "make_neighbor_plan",
     "topology_from_axes", "set_default_policy", "get_default_policy",
     "ensure_tuned", "executor_cache_stats", "clear_executor_cache",
+    "TRANSPORTS",
 ]

@@ -1,0 +1,231 @@
+"""Device-side Pallas lowering of a ``CompiledExec`` (the paper's
+GPU-aware pillar): the WHOLE compiled round sequence as ONE kernel.
+
+Both existing transports lower every compiled ``CommRound`` to a
+gather-permute-scatter around ``shard_map``/``ppermute``, so an R-round
+schedule pays R XLA collective launches.  This module takes the baked
+numpy index tables of a ``CompiledExec`` (``_ExecRound.src/dst/g_safe/
+g_mask/t_safe/t_mask`` plus the folded local pre/post permutations) and
+embeds them as kernel-resident constants in a single ``pl.pallas_call``
+over the *global* slot buffer ``[nranks, num_slots, *slot]``:
+
+  * the buffer is staged once into a VMEM scratch work buffer; every
+    slot route is emitted with *static* indices (Pallas kernels cannot
+    capture array constants, and static indices are what lets Mosaic
+    lower each move as a plain VMEM copy), so ``-1`` routes simply emit
+    nothing — no scratch row, unlike the fancy-indexed backends;
+  * each round runs in two phases that preserve ppermute semantics
+    exactly: phase 1 gathers every edge's payload from the pre-round
+    state (reads only — intra-round hazards and (r, r) self-copies are
+    safe by construction), phase 2 lands every write
+    (``.at[t].set``, or ``.at[t].add`` for reduce rounds, which
+    accumulate in scratch instead of materializing an inbox);
+  * ``chunks > 1`` tiles the slot row axis onto the Pallas grid — the
+    same always-legal row decomposition as ``Transport.run_chunked``
+    (rows never mix; the slot-granularity sibling is ``split_round``) —
+    and Pallas's grid pipelining double-buffers the block transfers:
+    chunk ``i+1``'s HBM->VMEM copy is issued while chunk ``i`` drains
+    through the permutation network.  Still one kernel launch.
+
+R rounds -> 1 launch is the whole point: ``PallasExec.launches`` counts
+launches so the benchmark can assert the amortization (R -> 1 over the
+corpus).  On a CPU/GPU host the kernel runs under the Pallas interpreter
+(``kernels.compat.pallas_interpret``), bit-exact vs
+``SimTransport.run_reference`` — that is what makes the transport
+testable in tier-1 CI.  On real multi-chip TPU topologies the same
+structure extends to ``pltpu.make_async_remote_copy`` RDMA rounds
+(per-chip local buffers, no global gather); that variant needs device
+semaphores the interpreter cannot model and is gated behind actual TPU
+presence — see the README "Device-side transport" subsection.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.executor import CompiledExec, get_executor
+from repro.core.schedule import CommSchedule, validate_schedules_enabled
+from repro.core.topology import Topology
+from repro.kernels.compat import pallas_interpret, tpu_compiler_params
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+class PallasExec:
+    """One ``CompiledExec`` lowered to a single-kernel Pallas executor.
+
+    ``run(gbuf, chunks=)`` executes the full schedule (local_pre ->
+    every compiled round -> local_post) on a global buffer
+    ``[nranks, num_slots, *slot]`` and returns the same shape — the
+    ``SimTransport`` calling convention, which is what lets the
+    ``run_reference`` oracle check it bit-for-bit.  ``launches`` counts
+    ``pallas_call`` invocations (one per ``run``, regardless of round
+    count R); ``jit_traces`` counts actual lowerings (one per (shape,
+    dtype, chunks) thanks to the jit cache — the persistent-collective
+    property, same contract as ``CompiledExec.trace_count``).
+    """
+
+    def __init__(self, ex: CompiledExec, *, interpret: bool | None = None):
+        self.ex = ex
+        self.nranks = ex.nranks
+        self.num_slots = ex.num_slots
+        self.rounds = ex.rounds_after
+        self.interpret = (pallas_interpret() if interpret is None
+                          else bool(interpret))
+        self.launches = 0
+        self.jit_traces = 0
+        self._jitted: dict = {}
+
+    # -- kernel body ------------------------------------------------------
+    def _kernel(self, in_ref, out_ref, work):
+        """Executes on refs shaped [n, s, C, F].
+
+        Every index comes from the baked numpy tables as a Python int,
+        so the whole routing program is kernel-resident: Pallas kernels
+        cannot capture array constants, and static indices are exactly
+        what lets Mosaic turn each slot move into a plain VMEM copy
+        (no dynamic-gather lowering).  ``-1`` routes (masked slots) are
+        simply not emitted — no scratch row is needed here, unlike the
+        fancy-indexed numpy/shard_map backends."""
+        self.jit_traces += 1
+        ex = self.ex
+        n = self.nranks
+        # stage in + local_pre fold (non-bijective pre survives folding)
+        for r in range(n):
+            row = in_ref[r]                              # [s, C, F]
+            if ex._pre is not None:
+                row = jnp.stack([row[int(i)] for i in ex._pre[r]])
+            work[r] = row
+        zero = jnp.zeros(work.shape[2:], work.dtype)     # one slot block
+        for rnd in ex._rounds:
+            m = len(rnd.src)
+            # phase 1 — gather every edge's payload from the PRE-round
+            # state (ppermute semantics: no write is visible to any read
+            # of the same round; (r, r) self-pairs and intra-round
+            # hazards are correct by construction); masked gathers are
+            # send-zeros
+            vals = []
+            for e in range(m):
+                row = work[int(rnd.src[e])]              # [s, C, F]
+                vals.append([
+                    row[int(rnd.g_safe[e, j])]
+                    if rnd.g_mask[e, j] else zero
+                    for j in range(rnd.k)])
+            # phase 2 — land every write on its destination row; reduce
+            # rounds accumulate in the work scratch.  dst values are
+            # distinct within a round (perm is a matching), so reading
+            # ``work[dst]`` here still sees the pre-round row.  The
+            # masked-gather zero adds are kept: bit-parity with run_sim
+            # (x + 0.0 normalizes -0.0; chained adds in j order match
+            # np.add.at element order even for duplicate targets).
+            for e in range(m):
+                dst = int(rnd.dst[e])
+                cur = work[dst]
+                for j in range(rnd.k):
+                    if not rnd.t_mask[e, j]:
+                        continue                         # dropped slot
+                    t = int(rnd.t_safe[e, j])
+                    if rnd.reduce:
+                        cur = cur.at[t].add(vals[e][j])
+                    else:
+                        cur = cur.at[t].set(vals[e][j])
+                work[dst] = cur
+        # local_post + drain
+        for r in range(n):
+            row = work[r]
+            if ex._post is not None:
+                row = jnp.stack([row[int(i)] for i in ex._post[r]])
+            out_ref[r] = row
+
+    # -- launch -----------------------------------------------------------
+    def _build(self, c: int, cb: int, f: int, dtype) -> callable:
+        n, s = self.nranks, self.num_slots
+        grid = (c // cb,)
+        spec = pl.BlockSpec((n, s, cb, f), lambda i: (0, 0, i, 0))
+        return pl.pallas_call(
+            self._kernel,
+            grid=grid,
+            in_specs=[spec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((n, s, c, f), dtype),
+            scratch_shapes=[_vmem((n, s, cb, f), dtype)],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("arbitrary",)),
+            interpret=self.interpret,
+        )
+
+    def run(self, gbuf, *, chunks: int = 1):
+        """Execute the whole schedule as ONE Pallas kernel launch.
+
+        ``gbuf`` is [nranks, num_slots, *slot] (any array-like; returns
+        jnp).  ``chunks > 1`` requires slot row axis divisible by
+        ``chunks`` and tiles it over the grid (double-buffered block
+        pipeline; bit-identical to ``chunks=1``)."""
+        gbuf = jnp.asarray(gbuf)
+        n, s = self.nranks, self.num_slots
+        if gbuf.shape[:2] != (n, s):
+            raise ValueError(
+                f"PallasExec.run: buffer [{gbuf.shape}] does not match "
+                f"[nranks={n}, num_slots={s}, *slot]")
+        slot = gbuf.shape[2:]
+        if chunks < 1:
+            raise ValueError(f"PallasExec.run: chunks must be >= 1, "
+                             f"got {chunks}")
+        if chunks > 1:
+            if not slot or slot[0] % chunks:
+                raise ValueError(
+                    f"PallasExec.run: slot row axis {slot[:1]} must "
+                    f"divide by chunks={chunks}")
+            c = slot[0]
+            f = int(math.prod(slot[1:])) if len(slot) > 1 else 1
+        else:
+            c = 1
+            f = int(math.prod(slot)) if slot else 1
+        cb = c // chunks
+        key = (c, cb, f, gbuf.dtype)
+        call = self._jitted.get(key)
+        if call is None:
+            call = jax.jit(self._build(c, cb, max(f, 1), gbuf.dtype))
+            self._jitted[key] = call
+        self.launches += 1
+        out = call(gbuf.reshape(n, s, c, max(f, 1)))
+        return out.reshape((n, s) + slot)
+
+
+# ---------------------------------------------------------------------------
+# process-level cache (persistent-collective init, like executor._CACHE)
+# ---------------------------------------------------------------------------
+
+
+_CACHE: dict[tuple, PallasExec] = {}
+
+
+def get_pallas_exec(schedule: CommSchedule, *,
+                    topo: Topology | None = None,
+                    optimize: bool | None = None,
+                    interpret: bool | None = None) -> PallasExec:
+    """Lower once per (schedule content, optimize, validation flag,
+    topology geometry, interpret mode), then reuse forever — the same
+    key discipline as ``executor.get_executor`` (whose compiled rounds
+    this lowering consumes), plus the interpret flag."""
+    ex = get_executor(schedule, optimize=optimize, topo=topo)
+    mode = pallas_interpret() if interpret is None else bool(interpret)
+    key = (schedule.fingerprint(), ex.optimize,
+           validate_schedules_enabled(),
+           None if topo is None else topo.fingerprint(), mode)
+    pex = _CACHE.get(key)
+    if pex is None or pex.ex is not ex:      # executor cache was cleared
+        pex = PallasExec(ex, interpret=mode)
+        _CACHE[key] = pex
+    return pex
+
+
+def clear_cache() -> None:
+    """Drop every lowered Pallas executor (tests; after env flips)."""
+    _CACHE.clear()

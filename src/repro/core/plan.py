@@ -449,12 +449,13 @@ def run_sim(plan: NeighborPlan, values: Sequence[np.ndarray]) -> list[np.ndarray
 
 
 def run_shardmap(plan: NeighborPlan, local_values: jax.Array,
-                 axis_names) -> jax.Array:
+                 axis_names, *, transport: str = "shardmap") -> jax.Array:
     """SPMD executor (call inside shard_map): ``local_values`` is this
     rank's [n_local_max, feat] value rows; returns [n_recv_max, feat]
     (rows beyond this rank's recv_size are zeros).
-    Delegates to the shared ``ShardMapTransport``."""
-    from repro.core.transport import _flat_rank
+    Delegates to the shared ``ShardMapTransport`` — or, with
+    ``transport="pallas"``, the single-kernel ``PallasTransport``."""
+    from repro.core.transport import PallasTransport, _flat_rank
 
     names = ((axis_names,) if isinstance(axis_names, str)
              else tuple(axis_names))
@@ -462,7 +463,8 @@ def run_shardmap(plan: NeighborPlan, local_values: jax.Array,
     feat = local_values.shape[1:]
     buf = jnp.zeros((plan.buf_rows,) + feat, local_values.dtype)
     buf = buf.at[: local_values.shape[0]].set(local_values)
-    out = ShardMapTransport(n, names, topo=plan.topo).run(plan.schedule, buf)
+    cls = PallasTransport if transport == "pallas" else ShardMapTransport
+    out = cls(n, names, topo=plan.topo).run(plan.schedule, buf)
     n_recv_max = max(plan.recv_sizes)
     offs = jnp.asarray(plan.recv_offsets)[_flat_rank(names)]
     return jax.lax.dynamic_slice_in_dim(out, offs, n_recv_max, axis=0)

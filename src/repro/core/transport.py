@@ -3,7 +3,7 @@
 MPI Advance writes every collective algorithm once, against MPI point-to-
 point primitives, and runs it on any substrate.  We keep the same split:
 one IR (``CommSchedule``: gather tables -> static permutation -> scatter
-tables), two executors:
+tables), three executors:
 
   * ``SimTransport``      — numpy, rank-by-rank.  Bit-exact execution of
                             a schedule for N simulated ranks on zero
@@ -12,9 +12,13 @@ tables), two executors:
   * ``ShardMapTransport`` — the production substrate: each ``CommRound``
                             becomes one ``jax.lax.ppermute`` (the TPU ICI
                             point-to-point primitive) inside ``shard_map``.
+  * ``PallasTransport``   — device-side: the WHOLE compiled schedule as
+                            ONE Pallas kernel (core.pallas_lowering) —
+                            launch amortization for alpha-dominated
+                            message sizes (the paper's GPU-aware pillar).
 
 Dense collectives, neighborhood alltoallv plans, and partitioned
-transfers all execute through these two classes — there is exactly one
+transfers all execute through these classes — there is exactly one
 execution semantics to keep bit-identical.
 
 Buffers are slot-indexed: the working array has shape
@@ -257,3 +261,105 @@ class ShardMapTransport(Transport):
 
     def _axis_arg(self):
         return self.axis_names if len(self.axis_names) > 1 else self.axis_names[0]
+
+
+# ---------------------------------------------------------------------------
+# device-side Pallas substrate
+# ---------------------------------------------------------------------------
+
+
+class PallasTransport(Transport):
+    """Device-side execution: the WHOLE compiled schedule as ONE Pallas
+    kernel (core.pallas_lowering), instead of one ppermute launch per
+    round.
+
+    The kernel runs on the *global* slot buffer [nranks, num_slots,
+    *slot].  Used standalone (``run_global``, the SimTransport calling
+    convention — what the bit-exactness sweeps drive), or inside a
+    shard_map (``run``, the ShardMapTransport calling convention): the
+    local buffers are first combined with a single ``all_gather``, every
+    rank executes the kernel on the replicated global buffer
+    (deterministic, so all ranks agree bit-for-bit), and each keeps its
+    own row.  That trades bandwidth (the gather ships n× the data) for
+    launches (1 collective + 1 kernel vs R collectives) — the
+    alpha/beta crossover the tuner's ``transport`` policy cell prices
+    per size bucket.  On multi-chip TPU topologies the same kernel
+    structure extends to RDMA rounds without the gather; that variant
+    is TPU-gated (see pallas_lowering).
+    """
+
+    def __init__(self, nranks: int,
+                 axis_names: Sequence[str] | str | None = None,
+                 topo: Topology | None = None):
+        self.nranks = nranks
+        self.topo = topo
+        if axis_names is None:
+            self.axis_names = None
+        else:
+            self.axis_names = ((axis_names,) if isinstance(axis_names, str)
+                               else tuple(axis_names))
+
+    def run_global(self, schedule: CommSchedule, gbuf, *, chunks: int = 1):
+        """Execute on a global [nranks, num_slots, *slot] buffer — one
+        kernel launch; ``chunks > 1`` tiles the slot row axis over the
+        Pallas grid (double-buffered block pipeline, bit-identical)."""
+        from repro.core.pallas_lowering import get_pallas_exec
+        assert gbuf.shape[0] == self.nranks, (gbuf.shape, self.nranks)
+        assert gbuf.shape[1] == schedule.num_slots
+        return get_pallas_exec(schedule, topo=self.topo).run(
+            gbuf, chunks=chunks)
+
+    def run(self, schedule: CommSchedule, buf: jax.Array) -> jax.Array:
+        """Called from inside a shard_map over ``axis_names`` with the
+        *local* buffer [num_slots, *slot]; returns the local result."""
+        if self.axis_names is None:
+            raise ValueError(
+                "PallasTransport.run needs axis_names (inside shard_map); "
+                "use run_global for host-side global-buffer execution")
+        # leading gathered axis is row-major over the name tuple — the
+        # same order as _flat_rank, so gbuf[r] is rank r's local buffer
+        gbuf = jax.lax.all_gather(buf, self._axis_arg())
+        gbuf = gbuf.reshape((self.nranks,) + buf.shape)
+        out = self.run_global(schedule, gbuf)
+        return jax.lax.dynamic_index_in_dim(
+            out, _flat_rank(self.axis_names), axis=0, keepdims=False)
+
+    def run_chunked(self, schedule: CommSchedule, buf: jax.Array, *,
+                    chunks: int, consume=None, init=None):
+        """Row-chunked execution inside shard_map.  With ``consume=None``
+        the chunking collapses into the kernel itself (grid tiling — one
+        launch, same as ``run``); with a consumer the pieces run through
+        a ``lax.scan`` so chunk ``i``'s ``consume`` compute overlaps
+        chunk ``i+1``'s gather+kernel, mirroring ShardMapTransport."""
+        if chunks <= 0:
+            raise ValueError(f"run_chunked: chunks must be >= 1, "
+                             f"got {chunks}")
+        assert buf.ndim >= 2, buf.shape
+        slots, rows = buf.shape[0], buf.shape[1]
+        if rows % chunks:
+            raise ValueError(
+                f"run_chunked: row count {rows} is not divisible by "
+                f"chunks={chunks}")
+        if consume is None:
+            if self.axis_names is None:
+                raise ValueError(
+                    "PallasTransport.run_chunked needs axis_names")
+            gbuf = jax.lax.all_gather(buf, self._axis_arg())
+            gbuf = gbuf.reshape((self.nranks,) + buf.shape)
+            out = self.run_global(schedule, gbuf, chunks=chunks)
+            return jax.lax.dynamic_index_in_dim(
+                out, _flat_rank(self.axis_names), axis=0, keepdims=False)
+        rc = rows // chunks
+        tail = buf.shape[2:]
+        xs = buf.reshape((slots, chunks, rc) + tail).swapaxes(0, 1)
+
+        def body(carry, xi):
+            xc, i = xi
+            return consume(carry, self.run(schedule, xc), i), None
+        carry, _ = jax.lax.scan(
+            body, init, (xs, jnp.arange(chunks, dtype=jnp.int32)))
+        return carry
+
+    def _axis_arg(self):
+        return (self.axis_names if len(self.axis_names) > 1
+                else self.axis_names[0])

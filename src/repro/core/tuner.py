@@ -59,6 +59,14 @@ PARTITIONED = "partitioned"
 # compute, priced by the executor's makespan model)
 OVERLAP = "overlap"
 _OVERLAP_PARTS = (1, 2, 4, 8)
+# transport substrate choice per size bucket: one ppermute launch per
+# compiled round ("shardmap") vs the whole schedule as one device-side
+# Pallas kernel ("pallas", core.pallas_lowering)
+TRANSPORT = "transport"
+_TRANSPORT_CHOICES = ("shardmap", "pallas")
+# one XLA collective/kernel dispatch worth of host-side overhead (s) —
+# the per-round alpha the single-kernel lowering amortizes away
+_LAUNCH_S = 5e-6
 DEFAULT_SIZES = (1 << 10, 1 << 14, 1 << 18, 1 << 22)   # bytes per rank
 _AXIS = "tune"          # mesh axis name used for measurement runs
 _ELEM = 4               # measurement payloads are float32
@@ -495,6 +503,90 @@ def tune_overlap(topo: Topology, *, sizes=DEFAULT_SIZES,
     return per
 
 
+def _transport_times(topo: Topology, nbytes: int) -> dict:
+    """Model both substrates for one payload size, on the MoE hot path's
+    collective (alltoall — the same representative ``tune_overlap``
+    prices).
+
+    shardmap: armed modeled transfer time + one launch per compiled
+    round.  pallas: one all_gather of the full per-rank buffer (the
+    bandwidth cost of replicated execution: block = nbytes, not
+    nbytes/n) + one collective launch + one kernel launch.  The
+    crossover is real: alpha-dominated small buckets amortize R
+    launches into 2, beta-dominated large ones pay the n× gather."""
+    from repro.core import executor
+
+    cands = _candidates("alltoall", topo)
+    name = min(cands, key=lambda a: _modeled(cands[a], topo, int(nbytes)))
+    sched = cands[name]
+    ex = executor.get_executor(sched, topo=topo)
+    block = max(1, int(nbytes) // max(1, sched.num_blocks))
+    t_shard = (ex.compiled_schedule.modeled_time(topo, block)
+               + ex.rounds_after * _LAUNCH_S)
+    ag = _candidates("allgather", topo)
+    t_gather = min(_modeled(ag[a], topo, int(nbytes) * topo.nranks)
+                   for a in ag)
+    t_pallas = t_gather + 2 * _LAUNCH_S
+    return {"schedule": name, "rounds": int(ex.rounds_after),
+            "times": {"shardmap": float(t_shard),
+                      "pallas": float(t_pallas)}}
+
+
+def tune_transport(topo: Topology, *, sizes=DEFAULT_SIZES,
+                   repeats: int = 3, force_model: bool = False) -> dict:
+    """Per-size-bucket transport winners (``transport="auto"`` in the
+    mpix_* API).  Pricing is purely the alpha-beta + launch model: on a
+    host without the real accelerator the pallas kernel runs under the
+    interpreter, whose wall clock measures the interpreter, not the
+    device — ``repeats``/``force_model`` are accepted only for
+    signature uniformity with the other tune_* entries."""
+    del repeats, force_model
+    per: dict = {}
+    for nbytes in sizes:
+        cell = _transport_times(topo, int(nbytes))
+        times = cell["times"]
+        # ties go to shardmap (never pay the n× gather for free)
+        best = min(_TRANSPORT_CHOICES, key=lambda k: (times[k],
+                                                      k != "shardmap"))
+        per[str(size_bucket(int(nbytes)))] = {
+            "best": best,
+            "nbytes": int(nbytes),
+            "times": times,
+            "schedule": cell["schedule"],
+            "rounds": cell["rounds"],
+        }
+    return per
+
+
+def select_transport(topo: Topology, nbytes: int, *,
+                     policy: str | None = None,
+                     table: TunedTable | None = None,
+                     path: str | Path | None = None) -> str:
+    """Substrate for ``transport="auto"``: "shardmap" or "pallas".
+
+    policy "fixed" always returns "shardmap" (the pre-device-side
+    default); "tuned" reads the persisted ``TRANSPORT`` winner (falling
+    back to the model when no table/section exists); anything else
+    prices both substrates with the launch-aware model."""
+    if policy == "fixed":
+        return "shardmap"
+    if policy == "tuned":
+        if table is None:
+            for fp in (substrate_fingerprint(topo),
+                       topo.fingerprint("model")):
+                table = load_table(fp, path=path)
+                if table is not None:
+                    break
+        if table is not None:
+            name = table.lookup(TRANSPORT, int(nbytes))
+            if name in _TRANSPORT_CHOICES:
+                return name
+        # no table / no TRANSPORT section: fall through to model pricing
+    times = _transport_times(topo, int(nbytes))["times"]
+    return min(_TRANSPORT_CHOICES, key=lambda k: (times[k],
+                                                  k != "shardmap"))
+
+
 def select_overlap_chunks(topo: Topology, nbytes: int, compute_s: float,
                           *, policy: str | None = None,
                           table: TunedTable | None = None,
@@ -553,6 +645,8 @@ def autotune(topo: Topology, *, path: str | Path | None = None,
     table.entries[PARTITIONED] = tune_partitioned(
         topo, sizes=sizes, repeats=repeats, force_model=force_model)
     table.entries[OVERLAP] = tune_overlap(
+        topo, sizes=sizes, repeats=repeats, force_model=force_model)
+    table.entries[TRANSPORT] = tune_transport(
         topo, sizes=sizes, repeats=repeats, force_model=force_model)
     table.violations = verify_guidelines(table, topo, tol=tol)
     save_table(table, path=path)
@@ -767,6 +861,8 @@ def stale_cells(table: TunedTable, topo: Topology) -> list:
             want = set(REGISTRY[PARTITIONED])
         elif coll == OVERLAP:
             want = {f"p{p}" for p in _OVERLAP_PARTS}
+        elif coll == TRANSPORT:
+            want = set(_TRANSPORT_CHOICES)
         else:
             continue
         for bucket, rec in per.items():
@@ -832,6 +928,10 @@ def retune_cells(table: TunedTable, topo: Topology, cells,
                 force_model=force_model).values()))
         elif coll == OVERLAP:
             fresh = next(iter(tune_overlap(
+                topo, sizes=(nbytes,), repeats=repeats,
+                force_model=force_model).values()))
+        elif coll == TRANSPORT:
+            fresh = next(iter(tune_transport(
                 topo, sizes=(nbytes,), repeats=repeats,
                 force_model=force_model).values()))
         else:

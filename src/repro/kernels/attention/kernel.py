@@ -63,10 +63,73 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
         o_ref[0, ...] = (acc[...] / denom[:, None]).astype(o_ref.dtype)
 
 
+def _kernel_gather(idx_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+                   scale, causal, window, softcap, bq, bk, nk):
+    """Dispatch-gather prologue: the q tile is assembled IN VMEM from a
+    token-order q buffer via per-output row indices (``-1`` -> zero
+    row) — the terminal gather round of an alltoall-style dispatch
+    fused into the attention kernel, so the permuted q tensor never
+    materializes in HBM.  Positions (causal/window masks) are
+    output-order.  The row gather uses a traced index vector; on TPU
+    this relies on Mosaic's dynamic-gather lowering (interpret mode —
+    the CI path — models it exactly)."""
+    j = pl.program_id(2)    # kv block
+    i = pl.program_id(1)    # q block
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    idx = idx_ref[0]                                    # [bq] int32
+    live = idx >= 0
+    qfull = q_ref[0].astype(jnp.float32)                # [Sq, D]
+    q = qfull[jnp.where(live, idx, 0)]                  # [bq, D]
+    q = jnp.where(live[:, None], q, 0.0) * scale
+    k = k_ref[0].astype(jnp.float32)                    # [bk, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.broadcast_to(live[:, None], (bq, bk))
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_s[:, 0], l_s[:, 0]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_cur[:, None])
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = alpha * l_prev + p.sum(axis=1)
+    acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())))
+    m_s[:, 0], l_s[:, 0] = m_cur, l_cur
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        # dead rows (idx -1): every kv position was masked, so the
+        # running max never left NEG_INF and p degenerated to exp(0) —
+        # the accumulator holds garbage there; zero it at the write.
+        denom = jnp.where(l_s[:, 0] > 0, l_s[:, 0], 1.0)
+        out = acc[...] / denom[:, None]
+        o_ref[0, ...] = jnp.where(live[:, None], out,
+                                  0.0).astype(o_ref.dtype)
+
+
 def flash_attention_bhsd(q, k, v, *, causal=True, window=None,
                          softcap=None, scale=None, block_q=128,
-                         block_k=128, interpret=False):
-    """q [BH, Sq, D], k/v [BK, Sk, D]; BH = BK * group -> out like q."""
+                         block_k=128, interpret=False, q_rows=None,
+                         nheads=None):
+    """q [BH, Sq, D], k/v [BK, Sk, D]; BH = BK * group -> out like q.
+
+    ``q_rows`` [B, Sq] (int32, requires ``nheads`` with BH = B * nheads)
+    turns on the dispatch-gather prologue: output row t of batch b
+    attends with row ``q_rows[b, t]`` of the token-order q buffer
+    (``-1`` -> zero row, output row is 0)."""
     BH, Sq, D = q.shape
     BK, Sk, _ = k.shape
     assert BH % BK == 0
@@ -76,29 +139,53 @@ def flash_attention_bhsd(q, k, v, *, causal=True, window=None,
     assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
     nk = Sk // bk
     scale = scale if scale is not None else D ** -0.5
-
-    kern = functools.partial(_kernel, scale=scale, causal=causal,
+    grid = (BH, Sq // bq, nk)
+    kv_specs = [
+        pl.BlockSpec((1, bk, D), lambda h, i, j, g=group: (h // g, j, 0)),
+        pl.BlockSpec((1, bk, D), lambda h, i, j, g=group: (h // g, j, 0)),
+    ]
+    out_spec = pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0))
+    scratch = [
+        _vmem((bq, D), jnp.float32),
+        _vmem((bq, 1), jnp.float32),
+        _vmem((bq, 1), jnp.float32),
+    ]
+    if q_rows is None:
+        kern = functools.partial(_kernel, scale=scale, causal=causal,
+                                 window=window, softcap=softcap,
+                                 bq=bq, bk=bk, nk=nk)
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+                      *kv_specs],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+            scratch_shapes=scratch,
+            compiler_params=_tpu_params(),
+            interpret=interpret,
+        )(q, k, v)
+    assert nheads is not None and BH % nheads == 0, (BH, nheads)
+    assert q_rows.shape == (BH // nheads, Sq), (q_rows.shape, Sq)
+    kern = functools.partial(_kernel_gather, scale=scale, causal=causal,
                              window=window, softcap=softcap,
                              bq=bq, bk=bk, nk=nk)
-    grid = (BH, Sq // bq, nk)
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
-            pl.BlockSpec((1, bk, D), lambda h, i, j, g=group: (h // g, j, 0)),
-            pl.BlockSpec((1, bk, D), lambda h, i, j, g=group: (h // g, j, 0)),
+            # idx tile for this q block, shared by the batch's heads
+            pl.BlockSpec((1, bq), lambda h, i, j, nh=nheads: (h // nh, i)),
+            # the FULL token-order q row buffer for this head
+            pl.BlockSpec((1, Sq, D), lambda h, i, j: (h, 0, 0)),
+            *kv_specs,
         ],
-        out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+        out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
-        scratch_shapes=[
-            _vmem((bq, D), jnp.float32),
-            _vmem((bq, 1), jnp.float32),
-            _vmem((bq, 1), jnp.float32),
-        ],
+        scratch_shapes=scratch,
         compiler_params=_tpu_params(),
         interpret=interpret,
-    )(q, k, v)
+    )(q_rows.astype(jnp.int32), q, k, v)
 
 
 def _vmem(shape, dtype):

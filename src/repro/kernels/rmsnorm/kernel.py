@@ -15,14 +15,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, s_ref, o_ref, *, eps, gemma_style):
-    x = x_ref[...].astype(jnp.float32)
+def _normalize(x, s_ref, o_ref, eps, gemma_style):
     var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
     y = x * jax.lax.rsqrt(var + eps)
     w = s_ref[...].astype(jnp.float32)
     if gemma_style:
         w = 1.0 + w
     o_ref[...] = (y * w).astype(o_ref.dtype)
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps, gemma_style):
+    _normalize(x_ref[...].astype(jnp.float32), s_ref, o_ref, eps,
+               gemma_style)
+
+
+def _reduce_kernel(p_ref, s_ref, o_ref, *, eps, gemma_style):
+    # allreduce epilogue: the [P, br, d] partials tile is summed over P
+    # in f32 IN VMEM — the terminal reduce round of the collective —
+    # and normalized before the single HBM write.  The reduced tensor
+    # never round-trips through HBM.
+    _normalize(p_ref[...].astype(jnp.float32).sum(axis=0), s_ref, o_ref,
+               eps, gemma_style)
 
 
 def rmsnorm_2d(x, scale, *, eps=1e-6, gemma_style=False, block_rows=256,
@@ -41,3 +54,26 @@ def rmsnorm_2d(x, scale, *, eps=1e-6, gemma_style=False, block_rows=256,
         out_shape=jax.ShapeDtypeStruct((R, d), x.dtype),
         interpret=interpret,
     )(x, scale)
+
+
+def rmsnorm_reduce_2d(parts, scale, *, eps=1e-6, gemma_style=False,
+                      block_rows=256, interpret=False):
+    """parts [P, R, d], scale [d] -> [R, d]: allreduce-epilogue fusion.
+
+    Sums the P partial activations (f32) and rmsnorms the result in one
+    kernel — P tile reads + 1 write per row block, vs the unfused
+    P reads + 1 write (reduce) + 1 read + 1 write (norm)."""
+    P, R, d = parts.shape
+    br = min(block_rows, R)
+    assert R % br == 0, (R, br)
+    kern = functools.partial(_reduce_kernel, eps=eps,
+                             gemma_style=gemma_style)
+    return pl.pallas_call(
+        kern,
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((P, br, d), lambda i: (0, i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, d), parts.dtype),
+        interpret=interpret,
+    )(parts, scale)

@@ -1,17 +1,23 @@
-"""jit'd public wrapper for the fused rmsnorm kernel (any leading
-shape; custom VJP via reference recompute; interpret mode on CPU)."""
+"""jit'd public wrappers for the fused rmsnorm kernels (any leading
+shape; custom VJP via reference recompute; interpret mode whenever no
+TPU backs the process — see kernels.compat.pallas_interpret)."""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.rmsnorm.kernel import rmsnorm_2d
+from repro.kernels.compat import pallas_interpret
+from repro.kernels.rmsnorm.kernel import rmsnorm_2d, rmsnorm_reduce_2d
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 
 
-def _on_cpu():
-    return jax.default_backend() == "cpu"
+def _block_rows(R: int) -> int:
+    br = 256
+    while R % br:
+        br //= 2
+    return max(br, 1)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
@@ -19,12 +25,9 @@ def rmsnorm(x, scale, eps=1e-6, gemma_style=False):
     shape = x.shape
     flat = x.reshape(-1, shape[-1])
     # pick a row block that divides (rows are a product of batch dims)
-    R = flat.shape[0]
-    br = 256
-    while R % br:
-        br //= 2
     out = rmsnorm_2d(flat, scale, eps=eps, gemma_style=gemma_style,
-                     block_rows=max(br, 1), interpret=_on_cpu())
+                     block_rows=_block_rows(flat.shape[0]),
+                     interpret=pallas_interpret())
     return out.reshape(shape)
 
 
@@ -41,3 +44,44 @@ def _bwd(eps, gemma_style, res, g):
 
 
 rmsnorm.defvjp(_fwd, _bwd)
+
+
+def rmsnorm_allreduce_ref(parts, scale, *, eps=1e-6, gemma_style=False):
+    """Oracle for the fused epilogue: f32 sum over the partials axis,
+    then the rmsnorm reference."""
+    red = parts.astype(jnp.float32).sum(axis=0).astype(parts.dtype)
+    return rmsnorm_ref(red, scale, eps=eps, gemma_style=gemma_style)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rmsnorm_allreduce(parts, scale, eps=1e-6, gemma_style=False):
+    """Fused allreduce->rmsnorm: ``parts`` [P, ..., d] are the per-rank
+    partial activations (e.g. one ``all_gather`` of a tensor-parallel
+    output); returns rmsnorm(sum over P) of shape [..., d] without ever
+    writing the reduced tensor to HBM.  The collective's terminal
+    reduce round runs as the kernel's epilogue — the compute-fusion leg
+    of the device-side transport (api.mpix_allreduce_rmsnorm)."""
+    P = parts.shape[0]
+    d = parts.shape[-1]
+    shape = parts.shape[1:]
+    flat = parts.reshape(P, -1, d)
+    out = rmsnorm_reduce_2d(flat, scale, eps=eps, gemma_style=gemma_style,
+                            block_rows=_block_rows(flat.shape[1]),
+                            interpret=pallas_interpret())
+    return out.reshape(shape)
+
+
+def _ar_fwd(parts, scale, eps, gemma_style):
+    return rmsnorm_allreduce(parts, scale, eps, gemma_style), (parts, scale)
+
+
+def _ar_bwd(eps, gemma_style, res, g):
+    parts, scale = res
+    _, vjp = jax.vjp(
+        lambda p_, s_: rmsnorm_allreduce_ref(p_, s_, eps=eps,
+                                             gemma_style=gemma_style),
+        parts, scale)
+    return vjp(g)
+
+
+rmsnorm_allreduce.defvjp(_ar_fwd, _ar_bwd)

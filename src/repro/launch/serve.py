@@ -41,6 +41,16 @@ def main(argv=None):
     ap.add_argument("--autotune-full", action="store_true",
                     help="ignore any persisted table and re-measure "
                          "everything from scratch (implies --autotune)")
+    ap.add_argument("--ep-alltoall", default="xla",
+                    help="mpix algorithm for the explicit EP dispatch "
+                         "(only used when --ep-transport is set)")
+    ap.add_argument("--ep-transport", default=None,
+                    choices=["shardmap", "pallas", "auto"],
+                    help="enable explicit expert-parallel prefill "
+                         "dispatch on this substrate: one ppermute per "
+                         "round (shardmap), the whole schedule as a "
+                         "single device kernel (pallas), or the tuner's "
+                         "per-size choice (auto)")
     args = ap.parse_args(argv)
 
     mpix_api.set_default_policy(args.select_policy)
@@ -70,7 +80,13 @@ def main(argv=None):
             cross = M.encode(params, cfg, frames)
 
         cache = M.init_cache(cfg, args.batch, max_len)
-        opts = ServeOptions()
+        ep_options = None
+        if args.ep_transport is not None:
+            from repro.train.moe_dispatch import EPOptions
+            ep_options = EPOptions(alltoall=args.ep_alltoall,
+                                   transport=args.ep_transport,
+                                   policy=args.select_policy)
+        opts = ServeOptions(ep_options=ep_options)
         decode = jax.jit(make_decode_step(cfg, mesh, opts))
 
         # prefill token-by-token through the decode step (keeps one

@@ -40,6 +40,7 @@ def build(args):
         dp_mode=args.dp_mode, dp_algorithm=args.dp_algorithm,
         grad_buckets=args.grad_buckets, moe_mode=args.moe_mode,
         ep_alltoall=args.ep_alltoall, ep_policy=args.select_policy,
+        ep_transport=args.ep_transport, dp_transport=args.dp_transport,
         remat=not args.smoke,
         peak_lr=args.lr, warmup_steps=max(1, args.steps // 20),
         total_steps=args.steps)
@@ -137,6 +138,16 @@ def main(argv=None):
     ap.add_argument("--grad-buckets", type=int, default=1)
     ap.add_argument("--moe-mode", default="dropless")
     ap.add_argument("--ep-alltoall", default="xla")
+    ap.add_argument("--ep-transport", default="shardmap",
+                    choices=["shardmap", "pallas", "auto"],
+                    help="substrate for schedule-backed EP collectives: "
+                         "one ppermute per round (shardmap), the whole "
+                         "schedule as a single device kernel (pallas), "
+                         "or the tuner's per-size choice (auto)")
+    ap.add_argument("--dp-transport", default="shardmap",
+                    choices=["shardmap", "pallas", "auto"],
+                    help="substrate for explicit-mode gradient sync "
+                         "(same choices as --ep-transport)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)

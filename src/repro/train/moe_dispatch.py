@@ -50,6 +50,11 @@ class EPOptions:
     # 0 = auto (tuner prices the software pipeline against the expert
     # FLOPs per chunk), >= 2 = explicit chunk count (clamped to the
     # largest divisor of the capacity C).  Bit-exact either way.
+    transport: str = "shardmap"
+    # substrate for the schedule-backed collectives: "shardmap" (one
+    # ppermute per compiled round), "pallas" (the whole schedule as one
+    # device-side kernel — core.pallas_lowering), or "auto" (tuner's
+    # per-size-bucket choice).  Ignored by "xla" algorithms.
 
 
 def ep_axes_for(cfg_moe: MoEConfig, mesh) -> tuple[str, ...]:
@@ -155,7 +160,8 @@ def _dispatch_overlapped(send, w_gate, w_up, w_down, *, chunks: int,
 
     return mpix.mpix_alltoall_overlap(
         x_cm, ep, consume, acc, chunks=chunks,
-        algorithm=opts.alltoall, policy=opts.policy)
+        algorithm=opts.alltoall, policy=opts.policy,
+        transport=opts.transport)
 
 
 def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
@@ -201,7 +207,8 @@ def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
                                    C=C, d=d)
     else:
         recv = mpix.mpix_alltoall(send, ep, algorithm=opts.alltoall,
-                                  policy=opts.policy)
+                                  policy=opts.policy,
+                                  transport=opts.transport)
         tok = recv.reshape(N_ep, E_loc, C, d).transpose(1, 0, 2, 3) \
                   .reshape(E_loc, N_ep * C, d)
 
@@ -212,7 +219,8 @@ def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
 
     back = ye4.transpose(1, 0, 2, 3).reshape(N_ep * E_loc * C, d)
     ret = mpix.mpix_alltoall(back, ep, algorithm=opts.alltoall,
-                             policy=opts.policy)
+                             policy=opts.policy,
+                             transport=opts.transport)
 
     gathered = jnp.concatenate([ret, jnp.zeros((1, d), x.dtype)])[dest]
     out_slice = jnp.einsum("tkd,tk->td", gathered.reshape(T, K, d), w)
@@ -220,5 +228,6 @@ def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
     # rebuild the full token set across the model axis
     out = mpix.mpix_allgather(out_slice, "model",
                               algorithm=opts.allgather,
-                              policy=opts.policy)
+                              policy=opts.policy,
+                              transport=opts.transport)
     return out.reshape(B, S, d)

@@ -48,6 +48,10 @@ class TrainOptions:
     ep_overlap_chunks: int | None = None   # EPOptions.overlap_chunks:
                                        # pipelined MoE dispatch (None =
                                        # off, 0 = tuner-priced auto)
+    ep_transport: str = "shardmap"     # EP collective substrate:
+                                       # "shardmap" | "pallas" | "auto"
+    dp_transport: str = "shardmap"     # explicit-mode grad-sync
+                                       # substrate (same choices)
     overlap_grad_chunks: int = 0       # explicit mode: > 0 pipelines
                                        # grad sync as reduce-scatter /
                                        # clip-on-shards / allgather in
@@ -106,7 +110,8 @@ def make_train_step(cfg, mesh, opts: TrainOptions) -> Callable:
             mesh, EPOptions(alltoall=opts.ep_alltoall,
                             capacity_factor=opts.ep_capacity,
                             policy=opts.ep_policy,
-                            overlap_chunks=opts.ep_overlap_chunks),
+                            overlap_chunks=opts.ep_overlap_chunks,
+                            transport=opts.ep_transport),
             cfg.mlp_act)
     elif opts.moe_mode == "dropless" and cfg.moe is not None:
         moe_dispatch = lambda p, c, x: moe_mod.forward_dropless(
@@ -165,11 +170,13 @@ def make_train_step(cfg, mesh, opts: TrainOptions) -> Callable:
                 grads, gnorm = sync.dp_allreduce_overlap(
                     grads, d_axes, algorithm=opts.dp_algorithm,
                     chunks=opts.overlap_grad_chunks, denom=denom,
-                    max_norm=opts.max_grad_norm)
+                    max_norm=opts.max_grad_norm,
+                    transport=opts.dp_transport)
             else:
                 grads = sync.dp_allreduce(
                     grads, d_axes, algorithm=opts.dp_algorithm,
-                    buckets=opts.grad_buckets, denom=denom)
+                    buckets=opts.grad_buckets, denom=denom,
+                    transport=opts.dp_transport)
             lval = jax.lax.psum(lsum, d_axes) / denom
             return lval, grads, residual, gnorm
 

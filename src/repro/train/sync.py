@@ -45,10 +45,12 @@ def _unflatten(flat, meta):
 
 
 def dp_allreduce(grads, axis_names, *, algorithm="xla", buckets=1,
-                 denom=None):
+                 denom=None, transport="shardmap"):
     """Sum-allreduce a gradient pytree over ``axis_names`` (call inside
     shard_map), divided by ``denom`` (scalar; e.g. the psum'd live-token
-    count so per-shard sum-losses combine into an exact global mean)."""
+    count so per-shard sum-losses combine into an exact global mean).
+    ``transport`` selects the substrate for schedule-backed algorithms
+    ("shardmap" | "pallas" | "auto"; ignored by "xla")."""
     names = (axis_names,) if isinstance(axis_names, str) \
         else tuple(axis_names)
     if denom is None:
@@ -61,7 +63,8 @@ def dp_allreduce(grads, axis_names, *, algorithm="xla", buckets=1,
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
     parts = flat.reshape(max(1, buckets), per)
-    done = [mpix.mpix_allreduce(parts[i], names, algorithm=algorithm)
+    done = [mpix.mpix_allreduce(parts[i], names, algorithm=algorithm,
+                                transport=transport)
             for i in range(parts.shape[0])]
     flat = jnp.concatenate(done)[: sum(meta[3])] / denom
     return _unflatten(flat, meta)
@@ -77,7 +80,8 @@ _RS_AG = {
 
 
 def dp_allreduce_overlap(grads, axis_names, *, algorithm="xla",
-                         chunks=2, denom=None, max_norm=None):
+                         chunks=2, denom=None, max_norm=None,
+                         transport="shardmap"):
     """Pipelined DP sync fused with gradient clipping: reduce-scatter
     chunks, per-shard norm/clip compute between the halves, allgather
     chunks — the optimizer-side compute runs on 1/N of the data while
@@ -116,14 +120,16 @@ def dp_allreduce_overlap(grads, axis_names, *, algorithm="xla",
     gsq = jnp.float32(0)
     for i in range(chunks):
         sh = mpix.mpix_reduce_scatter(parts[i], names,
-                                      algorithm=rs_alg) / denom
+                                      algorithm=rs_alg,
+                                      transport=transport) / denom
         gsq = gsq + jnp.sum(jnp.square(sh))
         shards.append(sh)
     gnorm = jnp.sqrt(jax.lax.psum(gsq, names))
     if max_norm is not None:
         scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
         shards = [sh * scale for sh in shards]
-    outs = [mpix.mpix_allgather(sh, names, algorithm=ag_alg)
+    outs = [mpix.mpix_allgather(sh, names, algorithm=ag_alg,
+                                transport=transport)
             for sh in shards]
     flat = jnp.concatenate(outs)[: total]
     return _unflatten(flat, meta), gnorm

@@ -28,7 +28,14 @@ else:
     os.environ["XLA_FLAGS"] = _keep_flags
 
 
-GOOD_DATA = {"sim_exec": {"speedup": 8.0, "compiled_total_s": 0.1}}
+GOOD_PALLAS = {
+    "launches": {"flat8.allreduce.ring_rs_ag": {
+        "rounds": 14, "runs": 3, "launches_per_run": 1, "jit_traces": 1}},
+    "epilogue": {"win": True, "modeled_win": 1.2222,
+                 "fused_walltime_s": 0.01, "unfused_walltime_s": 0.01},
+}
+GOOD_DATA = {"sim_exec": {"speedup": 8.0, "compiled_total_s": 0.1},
+             "pallas": GOOD_PALLAS}
 
 
 def test_check_missing_baseline_exits_nonzero(tmp_path):
@@ -57,7 +64,8 @@ def test_check_good_baseline_passes_and_regression_warns(tmp_path, capsys):
     bench_transport.check_against(str(base), GOOD_DATA)
     assert "::warning" not in capsys.readouterr().err
     # >2x ratio drop: still non-blocking, but the ::warning is printed
-    slow = {"sim_exec": {"speedup": 3.0, "compiled_total_s": 0.5}}
+    slow = dict(GOOD_DATA,
+                sim_exec={"speedup": 3.0, "compiled_total_s": 0.5})
     bench_transport.check_against(str(base), slow)
     assert "::warning" in capsys.readouterr().err
 
@@ -85,6 +93,51 @@ def test_check_lost_overlap_win_exits_nonzero(tmp_path):
                                          "speedup": 1.4}})
     with pytest.raises(SystemExit):
         bench_transport.check_against(str(base), dry)
+
+
+def test_check_lost_pallas_amortization_exits_nonzero(tmp_path):
+    """The pallas section's claims are model-level (machine-
+    independent): a launch count above 1/run, a corpus with no
+    multi-round schedule, a lost epilogue win, or a missing section all
+    block."""
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"sim_exec": {"speedup": 8.0}}))
+    import copy
+
+    multi = copy.deepcopy(GOOD_DATA)
+    multi["pallas"]["launches"]["flat8.allreduce.ring_rs_ag"][
+        "launches_per_run"] = 14          # one launch per round again
+    with pytest.raises(SystemExit):
+        bench_transport.check_against(str(base), multi)
+    flat = copy.deepcopy(GOOD_DATA)
+    flat["pallas"]["launches"]["flat8.allreduce.ring_rs_ag"][
+        "rounds"] = 1                     # R -> 1 vacuous at R == 1
+    with pytest.raises(SystemExit):
+        bench_transport.check_against(str(base), flat)
+    cold = copy.deepcopy(GOOD_DATA)
+    cold["pallas"]["epilogue"]["win"] = False
+    with pytest.raises(SystemExit):
+        bench_transport.check_against(str(base), cold)
+    gone = {k: v for k, v in GOOD_DATA.items() if k != "pallas"}
+    with pytest.raises(SystemExit):
+        bench_transport.check_against(str(base), gone)
+
+
+def test_committed_baseline_has_pallas_wins():
+    """The committed artifact must record the device-side-transport
+    acceptance numbers: every corpus schedule at 1 launch/run with at
+    least one genuinely multi-round schedule, and the strict modeled
+    epilogue win."""
+    committed = Path(__file__).resolve().parents[1] / "BENCH_transport.json"
+    with open(committed) as fh:
+        data = json.load(fh)
+    pal = data["pallas"]
+    assert pal["launches"]
+    assert all(v["launches_per_run"] == 1 and v["jit_traces"] == 1
+               for v in pal["launches"].values())
+    assert max(v["rounds"] for v in pal["launches"].values()) > 1
+    assert pal["epilogue"]["win"] is True
+    assert pal["epilogue"]["modeled_win"] > 1.0
 
 
 def test_committed_baseline_has_makespan_wins():

@@ -51,6 +51,16 @@ def test_executor_cache_trace_counts_and_fusion():
 
 
 @pytest.mark.slow
+def test_pallas_transport_device_paths():
+    """Device-side single-kernel transport (PallasTransport) inside
+    real shard_map: bit-exact vs ShardMapTransport for every dense
+    collective + neighbor plan + overlap path, and the fused
+    allreduce->rmsnorm epilogue vs its unfused oracle."""
+    out = run_script("check_pallas_transport.py")
+    assert "ALL OK" in out
+
+
+@pytest.mark.slow
 def test_neighbor_plan_shardmap():
     out = run_script("check_neighbor_shardmap.py")
     assert "ALL OK" in out
