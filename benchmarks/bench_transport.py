@@ -19,6 +19,12 @@ Sections, tracking the compiled-executor wins from that PR onward:
                     HBM-traffic win ((P+1)·T vs (P+3)·T).  Both claims
                     are machine-independent and BLOCKING under
                     ``--check`` (the CI ``--check-transport`` gate).
+  * ``fleet``     — online tuning (the drift-healing PR): a deterministic
+                    DCN degradation must heal a strict SUBSET of the
+                    tuned table (cells re-measured vs total), and a pod
+                    loss must re-derive every registered schedule
+                    bit-exact for the shrunk topology.  Model-level,
+                    machine-independent, BLOCKING under ``--check``.
 
 CLI:
     PYTHONPATH=src python -m benchmarks.bench_transport \
@@ -397,6 +403,84 @@ def bench_pallas() -> dict:
     return {"launches": launches, "epilogue": epilogue}
 
 
+def bench_fleet() -> dict:
+    """Fleet-scale tuning section (the online drift-healing PR).
+
+    Deterministic on the model substrate (``LinkFault`` +
+    ``model_timer``), so every number is machine-independent and the
+    claims are BLOCKING under ``--check``:
+
+      * scoped heal — a DCN bandwidth collapse (beta x16) must re-measure
+        strictly fewer table cells than the table holds (alpha-dominated
+        small buckets are unaffected by a beta drift; a full re-tune
+        means the scoping broke) while still bumping the generation and
+        evicting the stale geometry's compiled plans/executors;
+      * elastic re-derivation — dropping a whole pod must re-derive
+        every registered schedule for the surviving topology, and each
+        re-derived schedule must be bit-exact (fingerprint-equal) with
+        a fresh build on that topology.
+    """
+    import tempfile
+    from pathlib import Path
+
+    from repro.core.algorithms import REGISTRY
+    from repro.core.linkprobe import model_timer
+    from repro.core.topology import DCN_LINK, ICI_LINK, TopoLevel, Topology
+    from repro.runtime.elastic import ElasticScheduleSet
+    from repro.runtime.fault import LinkFault
+    from repro.runtime.tuning_daemon import TuningDaemon
+
+    base = Topology.from_levels([
+        TopoLevel("dcn", 2, DCN_LINK, dcn=True),
+        TopoLevel("ici", 4, ICI_LINK)])
+    fault = LinkFault()
+    with tempfile.TemporaryDirectory() as td:
+        daemon = TuningDaemon(
+            base, path=Path(td) / "tuned.json", force_model=True,
+            timer=model_timer(base, fault=fault), repeats=1)
+        fault.degrade(0, beta_scale=16.0)
+        report = daemon.probe_and_heal(step=1)
+    heal = {
+        "drifted_levels": list(report.drifted_levels),
+        "cells_total": report.total_cells,
+        "cells_affected": len(report.affected_cells),
+        "cells_retuned": len(report.retuned_cells),
+        "generation": report.generation,
+        "invalidated": report.invalidated,
+        "scoped": bool(
+            0 < len(report.affected_cells) < report.total_cells),
+    }
+    assert heal["scoped"], heal
+    assert heal["generation"] >= 1 and heal["cells_retuned"] >= 1, heal
+    emit("transport", "fleet.heal.cells",
+         f"{heal['cells_retuned']}/{heal['cells_total']}", "cells",
+         "scoped re-measure")
+    emit("transport", "fleet.heal.invalidated",
+         heal["invalidated"]["executors"], "executors", "stale geometry")
+
+    entries = {"grad_sync": ("allreduce", "ring_rs_ag"),
+               "ep_dispatch": ("alltoall", "pairwise")}
+    schedules = ElasticScheduleSet(daemon.topo, entries)
+    swap = schedules.shrink([0, 1, 2, 3])       # pod 0 dies
+    bit_exact = all(
+        schedules.schedule_for(name).fingerprint()
+        == REGISTRY[coll][algo](schedules.topo).fingerprint()
+        for name, (coll, algo) in schedules.entries.items())
+    elastic = {
+        "lost_ranks": list(swap.lost_ranks),
+        "old_fingerprint": swap.old_fingerprint,
+        "new_fingerprint": swap.new_fingerprint,
+        "rederived": len(swap.rederived),
+        "invalidated": swap.invalidated,
+        "generation": swap.generation,
+        "bit_exact": bool(bit_exact),
+    }
+    assert elastic["rederived"] >= 1 and elastic["bit_exact"], elastic
+    emit("transport", "fleet.elastic.rederived", elastic["rederived"],
+         "schedules", f"-> {swap.new_fingerprint}")
+    return {"heal": heal, "elastic": elastic}
+
+
 def payload() -> dict:
     from repro.core import executor
 
@@ -408,6 +492,7 @@ def payload() -> dict:
         k: v for k, v in executor.cache_stats().items() if k != "executors"}
     data["makespan"] = bench_makespan()
     data["pallas"] = bench_pallas()
+    data["fleet"] = bench_fleet()
     data["sim_exec"] = bench_sim_exec()
     data["shardmap"] = bench_shardmap_traces()
     data["elapsed_s"] = round(time.time() - t0, 3)
@@ -496,6 +581,32 @@ def check_against(baseline_path: str, data: dict) -> None:
     print(f"# pallas: {len(pal['launches'])} corpus schedules at 1 "
           f"launch/run (max R={rmax}), epilogue modeled win "
           f"{ep['modeled_win']}x", file=sys.stderr)
+    # fleet section: scoped drift healing + elastic re-derivation run on
+    # the deterministic model substrate — blocking gates
+    fleet = data.get("fleet")
+    if fleet is None:
+        raise SystemExit(
+            "--check: current run's payload lacks the fleet section")
+    heal = fleet.get("heal", {})
+    if not heal.get("scoped") or not (
+            1 <= int(heal.get("cells_retuned", 0))
+            <= int(heal.get("cells_affected", 0))
+            < int(heal.get("cells_total", 0))):
+        raise SystemExit(
+            f"--check: drift heal no longer scoped (a beta collapse "
+            f"must re-measure some cells but never the whole table): "
+            f"{heal!r}")
+    if int(heal.get("invalidated", {}).get("executors", 0)) < 1:
+        raise SystemExit(
+            f"--check: drift heal evicted no stale executors ({heal!r})")
+    el = fleet.get("elastic", {})
+    if int(el.get("rederived", 0)) < 1 or not el.get("bit_exact"):
+        raise SystemExit(
+            f"--check: elastic re-derivation lost (schedules must be "
+            f"rebuilt bit-exact for the shrunk topology): {el!r}")
+    print(f"# fleet: healed {heal['cells_retuned']}/{heal['cells_total']}"
+          f" cells (scoped), elastic re-derived {el['rederived']} "
+          f"schedules bit-exact", file=sys.stderr)
 
 
 def main(argv=()) -> dict:

@@ -20,7 +20,6 @@ expose that layer.
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
@@ -69,15 +68,42 @@ def topology_from_axes(axis_names: Sequence[str]) -> Topology:
     return Topology.from_levels(levels)
 
 
-@functools.lru_cache(maxsize=None)
+# plan cache: (collective, algorithm, topo) -> CommSchedule.  A plain
+# dict rather than lru_cache so drift healing / elastic swaps can evict
+# by topology (``invalidate_topology``) instead of all-or-nothing.
+_SCHEDULES: dict = {}
+
+
 def _schedule(collective: str, algorithm: str, topo: Topology):
-    sched = REGISTRY[collective][algorithm](topo)
-    # warm the persistent-executor cache at plan time (MPI-4 persistent
-    # init): by the first traced call the tables are already baked and
-    # the topology-armed fusion/reordering pass has run
-    from repro.core import executor
-    executor.get_executor(sched, topo=topo)
+    key = (collective, algorithm, topo)
+    sched = _SCHEDULES.get(key)
+    if sched is None:
+        sched = REGISTRY[collective][algorithm](topo)
+        # warm the persistent-executor cache at plan time (MPI-4
+        # persistent init): by the first traced call the tables are
+        # already baked and the topology-armed fusion/reordering pass
+        # has run
+        from repro.core import executor
+        executor.get_executor(sched, topo=topo)
+        _SCHEDULES[key] = sched
     return sched
+
+
+def invalidate_topology(topo: Topology | str) -> dict:
+    """Scoped cache eviction for one geometry (drift heal / elastic
+    swap): drop the cached plans built against ``topo`` (a ``Topology``
+    or its fingerprint string) and the compiled executors armed with
+    its fingerprint.  Plans and executors for every other geometry —
+    including the new measured one about to take over — are untouched.
+    Returns ``{"plans": n, "executors": m}`` eviction counts.
+    """
+    from repro.core import executor
+    fp = topo if isinstance(topo, str) else topo.fingerprint()
+    doomed = [k for k in _SCHEDULES if k[2].fingerprint() == fp]
+    for k in doomed:
+        del _SCHEDULES[k]
+    return {"plans": len(doomed),
+            "executors": executor.invalidate_topology(fp)}
 
 
 def executor_cache_stats() -> dict:
@@ -446,5 +472,5 @@ __all__ = [
     "mpix_neighbor_alltoallv", "make_neighbor_plan",
     "topology_from_axes", "set_default_policy", "get_default_policy",
     "ensure_tuned", "executor_cache_stats", "clear_executor_cache",
-    "TRANSPORTS",
+    "invalidate_topology", "TRANSPORTS",
 ]

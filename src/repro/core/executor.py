@@ -1133,6 +1133,22 @@ def clear_cache() -> None:
     _HITS["hits"] = _HITS["misses"] = 0
 
 
+def invalidate_topology(fingerprint: str | None) -> int:
+    """Scoped eviction: drop only the executors armed with the given
+    topology fingerprint, returning how many were dropped.
+
+    This is the drift-healing counterpart of ``clear_cache``: when a
+    probe pass moves a link model, only the geometry that changed is
+    stale — executors armed with other geometries (and the topology-free
+    ones, key slot ``None``) keep their baked tables and jit traces.
+    Pass ``None`` to evict the topology-free entries instead.
+    """
+    doomed = [k for k in _CACHE if k[3] == fingerprint]
+    for k in doomed:
+        del _CACHE[k]
+    return len(doomed)
+
+
 def cache_stats() -> dict:
     """Aggregate cache + per-executor stats for telemetry/benchmarks."""
     return {

@@ -43,6 +43,21 @@ class LinkModel:
     alpha: float  # latency per message (s)
     beta: float   # seconds per byte (1 / bandwidth)
 
+    def __post_init__(self):
+        # Probe fits feed straight into here: a NaN/inf/negative
+        # coefficient would silently poison every modeled time and the
+        # tuned-table fingerprints derived from it, so reject at the
+        # source instead.
+        for field in ("alpha", "beta"):
+            v = getattr(self, field)
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                raise ValueError(f"LinkModel.{field} must be a real "
+                                 f"number, got {v!r}")
+            if not math.isfinite(v) or v < 0:
+                raise ValueError(f"LinkModel.{field} must be finite and "
+                                 f">= 0, got {v!r}")
+            object.__setattr__(self, field, float(v))
+
     def time(self, nbytes: float, nmsgs: int = 1) -> float:
         return nmsgs * self.alpha + nbytes * self.beta
 

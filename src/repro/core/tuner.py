@@ -887,6 +887,59 @@ def _cell_differs(fresh: dict, rec: dict, tol: float) -> bool:
     return False
 
 
+def _model_cell(coll: str, topo: Topology, nbytes: int) -> dict | None:
+    """Model-priced timing of one (collective, size) cell under ``topo``
+    — the cheap probe ``drift_cells`` uses to ask "would this cell's
+    selection change under the new links?" without re-measuring."""
+    if coll in COLLECTIVES:
+        return _time_cell(coll, _candidates(coll, topo), topo, nbytes,
+                          measured=False, repeats=1, include_xla=False)
+    if coll == NEIGHBOR:
+        tuned = tune_neighbor(topo, sizes=(nbytes,), repeats=1,
+                              force_model=True)
+    elif coll == PARTITIONED:
+        tuned = tune_partitioned(topo, sizes=(nbytes,), repeats=1,
+                                 force_model=True)
+    elif coll == OVERLAP:
+        tuned = tune_overlap(topo, sizes=(nbytes,), repeats=1,
+                             force_model=True)
+    elif coll == TRANSPORT:
+        tuned = tune_transport(topo, sizes=(nbytes,), repeats=1,
+                               force_model=True)
+    else:
+        return None
+    return next(iter(tuned.values()))
+
+
+def drift_cells(table: TunedTable, old_topo: Topology, new_topo: Topology,
+                *, tol: float = 1.10) -> list:
+    """Cells of ``table`` whose selection the link-model drift from
+    ``old_topo`` to ``new_topo`` could plausibly move — the scoped
+    re-measurement work list for the online healing daemon.
+
+    Every cell is priced TWICE through the alpha-beta model (cheap —
+    the executors are cached), once per geometry, and included iff the
+    two pricings differ selection-meaningfully (``_cell_differs``: best
+    flipped, candidate set changed, or any timing beyond ``tol``).
+    Comparing model-vs-model isolates the drift's effect: comparing a
+    fresh model pricing against a recorded *measured* timing would flag
+    every cell on every tick.  A beta-only DCN degradation therefore
+    leaves alpha-dominated small buckets (and DCN-free collectives) off
+    the list entirely — the "no full re-tune" guarantee.
+    """
+    out = []
+    for coll, per in table.entries.items():
+        for bucket, rec in sorted(per.items(), key=lambda kv: int(kv[0])):
+            nbytes = int(rec["nbytes"])
+            old_cell = _model_cell(coll, old_topo, nbytes)
+            new_cell = _model_cell(coll, new_topo, nbytes)
+            if old_cell is None or new_cell is None:
+                continue
+            if _cell_differs(new_cell, old_cell, tol):
+                out.append((coll, bucket))
+    return out
+
+
 def retune_cells(table: TunedTable, topo: Topology, cells,
                  *, repeats: int = 3, force_model: bool = False,
                  include_xla: bool = True, tol: float = 1.10) -> list:

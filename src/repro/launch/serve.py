@@ -41,6 +41,14 @@ def main(argv=None):
     ap.add_argument("--autotune-full", action="store_true",
                     help="ignore any persisted table and re-measure "
                          "everything from scratch (implies --autotune)")
+    ap.add_argument("--probe-links", action="store_true",
+                    help="wire-measure per-level link models before "
+                         "tuning; tables key on measured geometry "
+                         "(lm[] fingerprints)")
+    ap.add_argument("--heal-interval", type=float, default=0.0,
+                    help="run the drift-healing tuner daemon in the "
+                         "background every N seconds while serving "
+                         "(0 = off); heals are scoped to drifted cells")
     ap.add_argument("--ep-alltoall", default="xla",
                     help="mpix algorithm for the explicit EP dispatch "
                          "(only used when --ep-transport is set)")
@@ -63,7 +71,14 @@ def main(argv=None):
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
     if args.autotune or args.autotune_full:
         from repro.launch.train import autotune_mesh
-        autotune_mesh(mesh, full=args.autotune_full)
+        autotune_mesh(mesh, full=args.autotune_full,
+                      probe=args.probe_links)
+    daemons = []
+    if args.heal_interval > 0:
+        from repro.launch.train import heal_daemons
+        daemons = heal_daemons(mesh, 1)
+        for d in daemons:
+            d.start(interval_s=args.heal_interval)
 
     max_len = args.prompt_len + args.gen
     with compat.set_mesh(mesh):
@@ -105,6 +120,12 @@ def main(argv=None):
                 tok = nxt
                 outs.append(np.asarray(nxt)[:, 0])
         dt = time.time() - t0
+    for d in daemons:
+        d.stop()
+        healed = sum(1 for r in d.reports if r.healed)
+        if healed:
+            print(f"tuner daemon: {len(d.reports)} probe pass(es), "
+                  f"{healed} heal(s) on {d.topo.fingerprint()}")
     gen = np.stack(outs, 1)
     print(f"generated {gen.shape} in {dt:.2f}s "
           f"({(max_len - 1) * args.batch / dt:.1f} tok/s)")

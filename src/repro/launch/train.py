@@ -75,7 +75,8 @@ def mesh_topologies(mesh):
     return list(topos.values())
 
 
-def autotune_mesh(mesh, repeats: int = 3, full: bool = False):
+def autotune_mesh(mesh, repeats: int = 3, full: bool = False,
+                  probe: bool = False):
     """Tune (or heal) every topology this mesh's collectives query at
     trace time.
 
@@ -87,10 +88,22 @@ def autotune_mesh(mesh, repeats: int = 3, full: bool = False):
     trigger a scoped re-measure of only those cells and bump the table
     generation — untouched cells keep their timings.  ``full=True``
     forces a from-scratch re-tune of everything.
+
+    ``probe=True`` runs the wire-measurement pass first
+    (``core.linkprobe``): each topology's per-level alpha/beta is
+    measured through the transports (ping-pong/injection probes) and
+    the tables are keyed by the *measured* geometry — their
+    fingerprints carry the fitted ``lm[...]`` link models instead of
+    datasheet constants.
     """
-    from repro.core import tuner
+    from repro.core import linkprobe, tuner
     tables = []
     for topo in mesh_topologies(mesh):
+        if probe:
+            measured = linkprobe.measured_topology(topo, repeats=repeats)
+            print(f"probed links: {topo.fingerprint()} -> "
+                  f"{tuner.substrate_fingerprint(measured)}")
+            topo = measured
         table = (None if full else
                  tuner.load_table(tuner.substrate_fingerprint(topo)))
         if table is None:
@@ -106,6 +119,51 @@ def autotune_mesh(mesh, repeats: int = 3, full: bool = False):
             print(f"  guideline violation: {v}")
         tables.append(table)
     return tables
+
+
+def heal_daemons(mesh, heal_every: int):
+    """One ``TuningDaemon`` per mesh topology, probing every
+    ``heal_every`` steps — the online drift-healing heartbeat the
+    training loop ticks from ``on_step``."""
+    from repro.runtime import TuningDaemon
+    return [TuningDaemon(topo, probe_every=heal_every)
+            for topo in mesh_topologies(mesh)]
+
+
+def make_elastic(mesh, policy: str):
+    """(RankLossSignal, on_rank_loss) for ``FaultTolerantLoop``: on
+    rank loss, re-derive the launcher's staged schedules (grad sync +
+    EP dispatch) for the shrunk topology and swap them in place — the
+    loop keeps stepping, no restart."""
+    from repro.core import selector
+    from repro.runtime import ElasticScheduleSet, RankLossSignal
+
+    topo = max(mesh_topologies(mesh), key=lambda t: t.nranks)
+    nbytes = 1 << 20
+    entries = {}
+    for name, coll in (("grad_sync", "allreduce"),
+                       ("ep_dispatch", "alltoall")):
+        algo = selector.select(coll, topo, nbytes, policy=policy)
+        if algo == "xla":          # schedule sets hold IR plans only
+            algo = selector.select(coll, topo, nbytes, policy="model")
+        entries[name] = (coll, algo)
+    schedules = ElasticScheduleSet(topo, entries)
+    signal = RankLossSignal()
+
+    def on_rank_loss(state, step, lost):
+        in_range = [r for r in lost if r < schedules.topo.nranks]
+        if not in_range or len(in_range) >= schedules.topo.nranks:
+            print(f"rank loss {lost} outside schedule topology; "
+                  f"no swap")
+            return None
+        rep = schedules.shrink(in_range)
+        print(f"elastic swap @step {step}: lost {rep.lost_ranks}, "
+              f"{rep.old_fingerprint} -> {rep.new_fingerprint}, "
+              f"re-derived {len(rep.rederived)} schedule(s), evicted "
+              f"{rep.invalidated} stale executor(s)", flush=True)
+        return None                # state/step_fn unchanged: swap only
+
+    return signal, on_rank_loss, schedules
 
 
 def main(argv=None):
@@ -135,6 +193,20 @@ def main(argv=None):
     ap.add_argument("--autotune-full", action="store_true",
                     help="ignore any persisted table and re-measure "
                          "everything from scratch (implies --autotune)")
+    ap.add_argument("--probe-links", action="store_true",
+                    help="wire-measure per-level link models before "
+                         "tuning (ping-pong/injection probes through "
+                         "the transports); tuned tables key on the "
+                         "measured geometry (lm[] fingerprints)")
+    ap.add_argument("--heal-every", type=int, default=0,
+                    help="re-probe the fabric every N steps and heal "
+                         "tuned tables on drift — scoped: only cells "
+                         "whose selection the drift can move are "
+                         "re-measured (0 = off)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="on rank loss (RankLossSignal), re-derive the "
+                         "staged schedules for the shrunk topology and "
+                         "swap executors in place instead of exiting")
     ap.add_argument("--grad-buckets", type=int, default=1)
     ap.add_argument("--moe-mode", default="dropless")
     ap.add_argument("--ep-alltoall", default="xla")
@@ -156,7 +228,10 @@ def main(argv=None):
     mpix_api.set_default_policy(args.select_policy)
     cfg, mesh, opts = build(args)
     if args.autotune or args.autotune_full:
-        autotune_mesh(mesh, full=args.autotune_full)
+        autotune_mesh(mesh, full=args.autotune_full,
+                      probe=args.probe_links)
+    daemons = heal_daemons(mesh, args.heal_every) if args.heal_every \
+        else []
     pipe = DataPipeline(PipelineConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.batch))
@@ -179,19 +254,38 @@ def main(argv=None):
                       f"{dt*1e3:.0f} ms/step", flush=True)
             return state
 
+        def on_step(step, state):
+            for d in daemons:
+                rep = d.tick(step)
+                if rep is not None and rep.healed:
+                    print(f"drift healed @step {step}: levels "
+                          f"{rep.drifted_levels}, re-measured "
+                          f"{len(rep.retuned_cells)}/{rep.total_cells} "
+                          f"cell(s), generation {rep.generation}",
+                          flush=True)
+
         if args.ckpt_dir:
+            rank_loss = on_rank_loss = None
+            if args.elastic:
+                rank_loss, on_rank_loss, _ = make_elastic(
+                    mesh, args.select_policy)
             loop = FaultTolerantLoop(args.ckpt_dir,
                                      ckpt_every=args.ckpt_every,
-                                     preemption=PreemptionSignal(True))
+                                     preemption=PreemptionSignal(True),
+                                     rank_loss=rank_loss,
+                                     on_rank_loss=on_rank_loss)
             state, start = loop.resume_or_init(state)
             if start:
                 print(f"resumed from step {start}")
             state, stopped = loop.run(state, one_step,
                                       start_step=start,
-                                      num_steps=args.steps - start)
+                                      num_steps=args.steps - start,
+                                      on_step=on_step if daemons
+                                      else None)
         else:
             for s in range(args.steps):
                 state = one_step(state, s)
+                on_step(s + 1, state)
 
     if losses:
         print(f"final loss {np.mean(losses[-5:]):.4f} "

@@ -1,4 +1,8 @@
 from repro.runtime.fault import (  # noqa: F401
-    FaultTolerantLoop, PreemptionSignal)
+    FaultTolerantLoop, LinkFault, PreemptionSignal)
 from repro.runtime.straggler import StragglerMonitor  # noqa: F401
-from repro.runtime.elastic import remesh_plan  # noqa: F401
+from repro.runtime.elastic import (  # noqa: F401
+    ElasticScheduleSet, RankLossSignal, rank_remap, remesh_plan,
+    shrink_topology)
+from repro.runtime.tuning_daemon import (  # noqa: F401
+    DriftReport, TuningDaemon)

@@ -4,30 +4,76 @@ At 1000+ nodes the mean time between node failures is minutes-to-hours;
 the contract implemented here is the standard production one:
 
   * periodic async checkpoints (every ``ckpt_every`` steps),
-  * a preemption signal (SIGTERM on most schedulers) triggers one final
-    synchronous checkpoint before exit,
+  * a preemption signal (SIGTERM/SIGINT on most schedulers) triggers
+    one final synchronous checkpoint before exit — at most one
+    committed checkpoint per step, even when preemption lands exactly
+    on a periodic checkpoint boundary,
   * on (re)start, training resumes from the newest committed step —
     combined with the step-addressable data pipeline this makes any
     crash exactly-once-recoverable: no data is skipped or repeated,
   * restart may happen on a *different* mesh shape (elastic restore —
-    leaves come back as host numpy and are re-placed).
+    leaves come back as host numpy and are re-placed),
+  * a latched rank-loss notice (``runtime.elastic.RankLossSignal``)
+    triggers an in-place elastic swap instead of an exit: checkpoint,
+    hand the surviving-rank list to ``on_rank_loss``, and keep stepping
+    with whatever state/step_fn the handler returns — no restart.
+
+``LinkFault`` is the deterministic degraded-fabric injector the drift
+tests and the CI healing leg use: it scales specific topology levels'
+alpha/beta inside ``core.linkprobe.model_timer`` so a probe pass
+observes exactly the injected degradation and nothing else.
 """
 from __future__ import annotations
 
+import dataclasses
 import signal
 from typing import Callable
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, \
     restore_checkpoint
+from repro.core.topology import LinkModel
 
 
 class PreemptionSignal:
-    """Latches SIGTERM/SIGINT-style preemption notices (or test calls)."""
+    """Latches SIGTERM/SIGINT preemption notices (or test calls).
+
+    ``install_handlers=True`` installs the latch on BOTH signals —
+    cluster schedulers deliver SIGTERM, interactive runs deliver SIGINT
+    — and *chains* any previously installed callable handler instead of
+    clobbering it, so a metrics flusher or profiler hook registered
+    before the loop still runs.  The default SIGINT handler (which
+    raises ``KeyboardInterrupt``) is deliberately not chained: the
+    latch exists precisely to replace the abort with a final
+    checkpoint.  ``uninstall()`` restores whatever was displaced.
+    """
+
+    _SIGNALS = (signal.SIGTERM, signal.SIGINT)
 
     def __init__(self, install_handlers: bool = False):
         self._hit = False
+        self._prev: dict = {}
         if install_handlers:
-            signal.signal(signal.SIGTERM, lambda *_: self.trigger())
+            self.install()
+
+    def install(self) -> None:
+        for sig in self._SIGNALS:
+            if sig in self._prev:       # idempotent: never chain self
+                continue
+            prev = signal.getsignal(sig)
+            self._prev[sig] = prev
+            signal.signal(sig, self._make_handler(prev))
+
+    def _make_handler(self, prev):
+        def handler(signum, frame):
+            self.trigger()
+            if callable(prev) and prev is not signal.default_int_handler:
+                prev(signum, frame)
+        return handler
+
+    def uninstall(self) -> None:
+        for sig, prev in self._prev.items():
+            signal.signal(sig, prev)
+        self._prev.clear()
 
     def trigger(self):
         self._hit = True
@@ -37,20 +83,67 @@ class PreemptionSignal:
         return self._hit
 
 
+@dataclasses.dataclass
+class LinkFault:
+    """Multiplicative per-level link degradation (test/CI injector).
+
+    ``degrade(level, alpha_scale=, beta_scale=)`` arms the fault;
+    ``apply(level, link)`` is the hook ``linkprobe.model_timer`` calls
+    per probe — it returns the degraded ``LinkModel`` for armed levels
+    and the original otherwise.  Scaling alpha and beta independently
+    matters: a congested DCN shows up as a beta (bandwidth) collapse
+    with latency intact, which is exactly the drift shape that must
+    heal *only* the beta-dominated table cells.
+    """
+
+    scales: dict = dataclasses.field(default_factory=dict)
+
+    def degrade(self, level: int, *, alpha_scale: float = 1.0,
+                beta_scale: float = 1.0) -> None:
+        if alpha_scale < 0 or beta_scale < 0:
+            raise ValueError(
+                f"scales must be >= 0, got {alpha_scale}/{beta_scale}")
+        self.scales[int(level)] = (float(alpha_scale), float(beta_scale))
+
+    def clear(self, level: int | None = None) -> None:
+        if level is None:
+            self.scales.clear()
+        else:
+            self.scales.pop(int(level), None)
+
+    def apply(self, level: int, link: LinkModel) -> LinkModel:
+        sa, sb = self.scales.get(int(level), (1.0, 1.0))
+        if sa == 1.0 and sb == 1.0:
+            return link
+        return LinkModel(alpha=link.alpha * sa, beta=link.beta * sb)
+
+
 class FaultTolerantLoop:
     """Drives ``step_fn(state, step) -> state`` with checkpoint/restart.
 
     step_fn must be pure w.r.t. (state, step); the data pipeline is
     addressed by ``step`` inside it.  ``state`` is a pytree.
+
+    ``rank_loss`` (a ``runtime.elastic.RankLossSignal``-shaped latch
+    with ``take() -> list | None``) plus ``on_rank_loss(state, step,
+    lost_ranks)`` wire the elastic path: when ranks drop mid-run the
+    loop checkpoints, lets the handler re-derive schedules for the
+    shrunk topology (``runtime.elastic.ElasticScheduleSet.shrink``),
+    and continues with the returned ``(state, step_fn)`` — the step
+    counter and data pipeline never reset.
     """
 
     def __init__(self, ckpt_dir, *, ckpt_every: int = 100,
                  preemption: PreemptionSignal | None = None,
-                 num_shards: int = 1):
+                 num_shards: int = 1,
+                 rank_loss=None,
+                 on_rank_loss: Callable | None = None):
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.preemption = preemption or PreemptionSignal()
         self.ckpt = AsyncCheckpointer(ckpt_dir, num_shards=num_shards)
+        self.rank_loss = rank_loss
+        self.on_rank_loss = on_rank_loss
 
     def resume_or_init(self, init_state):
         step = latest_step(self.ckpt_dir)
@@ -64,6 +157,10 @@ class FaultTolerantLoop:
             num_steps: int, on_step=None):
         step = start_step
         end = start_step + num_steps
+        # step of the newest checkpoint this run committed/enqueued —
+        # the guard against double-saving one step when preemption (or
+        # the final save) lands on a periodic checkpoint boundary
+        saved = None
         while step < end:
             state = step_fn(state, step)
             step += 1
@@ -71,13 +168,34 @@ class FaultTolerantLoop:
                 on_step(step, state)
             if step % self.ckpt_every == 0:
                 self.ckpt.save(step, state, meta={"next_step": step})
+                saved = step
             if self.preemption.preempted:
                 self.ckpt.wait()
-                self.ckpt.save(step, state, meta={"next_step": step,
-                                                  "preempted": True})
-                self.ckpt.wait()
+                if saved != step:
+                    self.ckpt.save(step, state,
+                                   meta={"next_step": step,
+                                         "preempted": True})
+                    self.ckpt.wait()
                 return state, step
+            lost = (self.rank_loss.take()
+                    if self.rank_loss is not None else None)
+            if lost:
+                # persist the pre-swap state, then re-derive in place
+                self.ckpt.wait()
+                if saved != step:
+                    self.ckpt.save(step, state,
+                                   meta={"next_step": step,
+                                         "lost_ranks": sorted(lost)})
+                    self.ckpt.wait()
+                    saved = step
+                if self.on_rank_loss is not None:
+                    res = self.on_rank_loss(state, step, sorted(lost))
+                    if res is not None:
+                        state, new_fn = res
+                        if new_fn is not None:
+                            step_fn = new_fn
         self.ckpt.wait()
-        self.ckpt.save(end, state, meta={"next_step": end})
-        self.ckpt.wait()
+        if saved != end:
+            self.ckpt.save(end, state, meta={"next_step": end})
+            self.ckpt.wait()
         return state, step

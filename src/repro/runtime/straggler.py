@@ -44,8 +44,23 @@ class StragglerMonitor:
                 if e is not None and e > self.threshold * fleet]
 
     def rebalance(self) -> dict[int, list[int]]:
-        """Move each straggler's shards to the fastest non-straggler."""
+        """Move each straggler's shards to the fastest non-straggler;
+        a host measured healthy again reclaims its home shard first.
+
+        Recovery is symmetric with eviction: a shard moves away only
+        while its home host is flagged, and moves back the moment the
+        host's estimate drops under threshold — a transiently slow host
+        (GC pause, checkpoint write) is not stranded shard-less forever
+        with its donor permanently overloaded.  Hosts with no estimate
+        yet stay evicted (unknown is not healthy)."""
         slow = set(self.stragglers())
+        for h in range(self.num_hosts):
+            if h in slow or self._estimate(h) is None:
+                continue
+            for donor, shards in self.assignment.items():
+                if donor != h and h in shards:
+                    shards.remove(h)
+                    self.assignment[h].append(h)
         if not slow:
             return self.assignment
         fast = sorted(

@@ -34,8 +34,15 @@ GOOD_PALLAS = {
     "epilogue": {"win": True, "modeled_win": 1.2222,
                  "fused_walltime_s": 0.01, "unfused_walltime_s": 0.01},
 }
+GOOD_FLEET = {
+    "heal": {"scoped": True, "cells_total": 16, "cells_affected": 12,
+             "cells_retuned": 11, "generation": 1,
+             "invalidated": {"plans": 0, "executors": 17}},
+    "elastic": {"rederived": 2, "bit_exact": True, "invalidated": 2,
+                "generation": 1},
+}
 GOOD_DATA = {"sim_exec": {"speedup": 8.0, "compiled_total_s": 0.1},
-             "pallas": GOOD_PALLAS}
+             "pallas": GOOD_PALLAS, "fleet": GOOD_FLEET}
 
 
 def test_check_missing_baseline_exits_nonzero(tmp_path):
@@ -138,6 +145,49 @@ def test_committed_baseline_has_pallas_wins():
     assert max(v["rounds"] for v in pal["launches"].values()) > 1
     assert pal["epilogue"]["win"] is True
     assert pal["epilogue"]["modeled_win"] > 1.0
+
+
+def test_check_lost_fleet_claims_exits_nonzero(tmp_path):
+    """The fleet section is deterministic model output: an unscoped
+    heal (whole table re-measured), zero evictions, a lost bit-exact
+    elastic swap, or a missing section all block."""
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"sim_exec": {"speedup": 8.0}}))
+    import copy
+
+    full = copy.deepcopy(GOOD_DATA)
+    full["fleet"]["heal"].update(scoped=False, cells_affected=16,
+                                 cells_retuned=16)
+    with pytest.raises(SystemExit, match="scoped"):
+        bench_transport.check_against(str(base), full)
+    stale = copy.deepcopy(GOOD_DATA)
+    stale["fleet"]["heal"]["invalidated"] = {"plans": 0, "executors": 0}
+    with pytest.raises(SystemExit, match="stale executors"):
+        bench_transport.check_against(str(base), stale)
+    inexact = copy.deepcopy(GOOD_DATA)
+    inexact["fleet"]["elastic"]["bit_exact"] = False
+    with pytest.raises(SystemExit, match="bit-exact"):
+        bench_transport.check_against(str(base), inexact)
+    gone = {k: v for k, v in GOOD_DATA.items() if k != "fleet"}
+    with pytest.raises(SystemExit, match="fleet"):
+        bench_transport.check_against(str(base), gone)
+
+
+def test_committed_baseline_has_fleet_claims():
+    """The committed artifact must record the fleet-tuning acceptance
+    numbers: a scoped heal (strict subset of the table re-measured) and
+    a bit-exact elastic re-derivation."""
+    committed = Path(__file__).resolve().parents[1] / "BENCH_transport.json"
+    with open(committed) as fh:
+        data = json.load(fh)
+    fleet = data["fleet"]
+    heal = fleet["heal"]
+    assert heal["scoped"] is True
+    assert 1 <= heal["cells_retuned"] <= heal["cells_affected"] \
+        < heal["cells_total"]
+    assert heal["invalidated"]["executors"] >= 1
+    assert fleet["elastic"]["rederived"] >= 1
+    assert fleet["elastic"]["bit_exact"] is True
 
 
 def test_committed_baseline_has_makespan_wins():

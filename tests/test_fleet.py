@@ -1,0 +1,336 @@
+"""Fleet-scale tuning, end to end: probe -> drift heal -> elastic swap.
+
+The acceptance scenario for the online-tuning loop, run deterministically
+on the model substrate:
+
+  1. a ``TuningDaemon`` baselines a mesh through the probe pass (tables
+     keyed by measured ``lm[]`` geometry);
+  2. a DCN link degrades mid-run (``LinkFault``, beta x16) -> the next
+     tick detects drift on exactly that level, re-measures ONLY the
+     affected table cells (asserted: strictly fewer than the table — no
+     full re-tune), bumps the generation, and evicts exactly the stale
+     geometry's compiled plans/executors;
+  3. a pod drops -> the ``FaultTolerantLoop`` checkpoints, the elastic
+     handler re-derives every registered schedule for the shrunk
+     topology and swaps executors in place — no restart, and the
+     re-derived schedules are bit-exact with a fresh build on the
+     surviving topology.
+"""
+import numpy as np
+import pytest
+
+from repro.core import api, executor, tuner
+from repro.core.algorithms import REGISTRY
+from repro.core.linkprobe import model_timer
+from repro.core.topology import (DCN_LINK, ICI_LINK, TopoLevel, Topology,
+                                 flat_topology)
+from repro.runtime.elastic import (ElasticScheduleSet, RankLossSignal,
+                                   rank_remap, shrink_topology)
+from repro.runtime.fault import FaultTolerantLoop, LinkFault
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.tuning_daemon import TuningDaemon
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    executor.clear_cache()
+    tuner.clear_cache()
+    api._SCHEDULES.clear()
+    yield
+    executor.clear_cache()
+    tuner.clear_cache()
+    api._SCHEDULES.clear()
+
+
+def _base():
+    return Topology.from_levels([
+        TopoLevel("dcn", 2, DCN_LINK, dcn=True),
+        TopoLevel("ici", 4, ICI_LINK),
+    ])
+
+
+def _daemon(tmp_path, fault=None, **kw):
+    base = _base()
+    return TuningDaemon(
+        base, path=tmp_path / "tuned.json", force_model=True,
+        timer=model_timer(base, fault=fault), repeats=1, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the daemon
+# ---------------------------------------------------------------------------
+
+
+def test_daemon_tables_key_on_measured_geometry(tmp_path):
+    d = _daemon(tmp_path)
+    assert ":lm[" in d.topo.fingerprint()
+    assert d.table.fingerprint == tuner.substrate_fingerprint(
+        d.topo, force_model=True)
+
+
+def test_no_drift_tick_is_a_noop(tmp_path):
+    d = _daemon(tmp_path)
+    gen0 = d.table.generation
+    report = d.tick(0)
+    assert report is not None and not report.healed
+    assert report.retuned_cells == () and report.affected_cells == ()
+    assert report.invalidated == {"plans": 0, "executors": 0}
+    assert report.generation == gen0
+    assert report.old_fingerprint == report.new_fingerprint
+
+
+def test_tick_respects_probe_cadence(tmp_path):
+    d = _daemon(tmp_path, probe_every=3)
+    assert d.tick(1) is None and d.tick(2) is None
+    assert d.tick(3) is not None
+    with pytest.raises(ValueError, match="probe_every"):
+        TuningDaemon(_base(), probe_every=0)
+
+
+def test_dcn_drift_heals_scoped_not_full(tmp_path):
+    fault = LinkFault()
+    d = _daemon(tmp_path, fault=fault)
+    old_fp = d.topo.fingerprint()
+    # warm a cached api plan under the healthy geometry so the tick's
+    # eviction scope is observable on both caches
+    api._schedule("allgather", "hierarchical", d.topo)
+
+    fault.degrade(0, beta_scale=16.0)
+    report = d.probe_and_heal(step=7)
+
+    assert report.healed and report.drifted_levels == (0,)
+    assert report.old_fingerprint == old_fp
+    assert report.new_fingerprint == d.topo.fingerprint() != old_fp
+    # scoped: a bandwidth collapse moves beta-dominated cells, never the
+    # whole table — alpha-dominated small buckets stay untouched
+    assert 0 < len(report.affected_cells) < report.total_cells
+    assert 0 < len(report.retuned_cells) <= len(report.affected_cells)
+    assert report.generation == 1
+    # the stale geometry's compiled state is gone, old plan included
+    assert report.invalidated["plans"] >= 1
+    assert report.invalidated["executors"] >= 1
+    assert not any(k[3] == old_fp for k in executor._CACHE)
+    # the table now keys on the degraded measured geometry
+    assert d.table.fingerprint == tuner.substrate_fingerprint(
+        d.topo, force_model=True)
+    # the degraded fabric re-confirmed is not drift: next tick no-ops
+    report2 = d.probe_and_heal(step=8)
+    assert not report2.healed and report2.generation == 1
+
+
+def test_healed_topology_reprices_armed_executors(tmp_path):
+    fault = LinkFault()
+    d = _daemon(tmp_path, fault=fault)
+    before = REGISTRY["allgather"]["hierarchical"](d.topo)
+    t_before = before.modeled_time(d.topo, float(1 << 20))
+    fault.degrade(0, beta_scale=16.0)
+    d.probe_and_heal(step=1)
+    after = REGISTRY["allgather"]["hierarchical"](d.topo)
+    t_after = after.modeled_time(d.topo, float(1 << 20))
+    # collectives armed against the healed topology see the collapsed
+    # DCN bandwidth in their cost model
+    assert t_after > 4.0 * t_before
+    ex = executor.get_executor(after, topo=d.topo)
+    assert ex is executor.get_executor(after, topo=d.topo)  # warm
+
+
+def test_daemon_shares_heartbeat_with_straggler_monitor(tmp_path):
+    mon = StragglerMonitor(num_hosts=4, threshold=1.5, window=4)
+    for _ in range(4):
+        for h in range(3):
+            mon.record(h, 1.0)
+        mon.record(3, 10.0)
+    d = _daemon(tmp_path, monitor=mon)
+    report = d.probe_and_heal(step=0)
+    assert report.stragglers == (3,)
+    assert mon.assignment[3] == []      # rebalanced on the same tick
+
+
+def test_daemon_background_thread_probes(tmp_path):
+    d = _daemon(tmp_path)
+    d.start(interval_s=0.01)
+    import time
+    deadline = time.time() + 5.0
+    while not d.reports and time.time() < deadline:
+        time.sleep(0.01)
+    d.stop()
+    assert d.reports and not d.reports[0].healed
+    d.stop()                            # idempotent
+
+
+# ---------------------------------------------------------------------------
+# shrink_topology / rank_remap
+# ---------------------------------------------------------------------------
+
+
+def test_shrink_whole_pod_preserves_hierarchy():
+    topo = Topology.from_levels([
+        TopoLevel("dcn", 3, DCN_LINK, dcn=True),
+        TopoLevel("ici", 4, ICI_LINK)])
+    new = shrink_topology(topo, range(4, 8))    # middle pod dies
+    assert [(l.name, l.size) for l in new.levels] == \
+           [("dcn", 2), ("ici", 4)]
+    assert new.levels[0].dcn and new.levels[0].link == DCN_LINK
+    assert rank_remap(topo, range(4, 8)) == {
+        0: 0, 1: 1, 2: 2, 3: 3, 8: 4, 9: 5, 10: 6, 11: 7}
+
+
+def test_shrink_to_single_pod_drops_the_level():
+    new = shrink_topology(_base(), [0, 1, 2, 3])
+    assert [(l.name, l.size) for l in new.levels] == [("ici", 4)]
+    assert not new.levels[0].dcn
+
+
+def test_shrink_inner_axis_slice():
+    topo = _base()
+    # ici coordinate 2 dies in BOTH pods -> ici shrinks 4 -> 3
+    lost = [r for r in range(8) if topo.coords(r)[1] == 2]
+    new = shrink_topology(topo, lost)
+    assert [(l.name, l.size) for l in new.levels] == \
+           [("dcn", 2), ("ici", 3)]
+
+
+def test_shrink_irregular_loss_flattens():
+    new = shrink_topology(_base(), [1, 6])      # no whole slice
+    assert [(l.name, l.size) for l in new.levels] == [("ici", 6)]
+    assert new.levels[0].link == ICI_LINK and not new.levels[0].dcn
+    assert rank_remap(_base(), [1, 6])[7] == 5
+
+
+@pytest.mark.parametrize("lost,msg", [
+    ([], "empty"), ([9], "out of range"), ([-1], "out of range"),
+    (list(range(8)), "all ranks"),
+])
+def test_shrink_rejects_bad_losses(lost, msg):
+    with pytest.raises(ValueError, match=msg):
+        shrink_topology(_base(), lost)
+
+
+def test_rank_loss_signal_latches_and_clears():
+    sig = RankLossSignal()
+    assert sig.take() is None and not sig.pending
+    sig.trigger(3)
+    sig.trigger([1, 3, 2])
+    assert sig.pending
+    assert sig.take() == [1, 2, 3]
+    assert sig.take() is None
+
+
+# ---------------------------------------------------------------------------
+# elastic re-derivation
+# ---------------------------------------------------------------------------
+
+_ENTRIES = {"grad_sync": ("allreduce", "ring_rs_ag"),
+            "ep_dispatch": ("alltoall", "pairwise")}
+
+
+def test_elastic_swap_is_bit_exact_with_fresh_build():
+    topo = _base()
+    es = ElasticScheduleSet(topo, _ENTRIES)
+    old_fp = topo.fingerprint()
+    report = es.shrink([0, 1, 2, 3])            # pod 0 dies
+
+    assert report.lost_ranks == (0, 1, 2, 3)
+    assert report.old_fingerprint == old_fp
+    assert es.topo.nranks == 4
+    assert report.rederived == ("ep_dispatch", "grad_sync")
+    assert report.refit == () and report.generation == 1
+    assert report.invalidated >= 2              # both warmed executors
+    assert report.remap == {4: 0, 5: 1, 6: 2, 7: 3}
+    for name, (coll, algo) in _ENTRIES.items():
+        fresh = REGISTRY[coll][algo](es.topo)
+        assert es.schedule_for(name).fingerprint() == fresh.fingerprint()
+        assert es.executor_for(name) is executor.get_executor(
+            fresh, topo=es.topo)                # swapped-in cache is warm
+    assert not any(k[3] == old_fp for k in executor._CACHE)
+
+
+def test_elastic_swap_refits_inapplicable_algorithms():
+    es = ElasticScheduleSet(flat_topology(8),
+                            {"ag": ("allgather", "recursive_doubling")})
+    report = es.shrink([2, 5])                  # 6 ranks: not a power of 2
+    assert report.refit == ("ag",)
+    coll, algo = es.entries["ag"]
+    assert coll == "allgather" and algo != "recursive_doubling"
+    assert es.schedule_for("ag").fingerprint() == \
+        REGISTRY[coll][algo](es.topo).fingerprint()
+
+
+def test_rank_loss_swaps_schedules_without_restart(tmp_path):
+    """The full no-restart path: mid-run rank loss -> checkpoint with
+    the lost-rank manifest -> schedules re-derived for the shrunk
+    topology -> the SAME loop keeps stepping to completion."""
+    topo = _base()
+    es = ElasticScheduleSet(topo, _ENTRIES)
+    sig = RankLossSignal()
+    swaps = []
+
+    def on_rank_loss(state, step, lost):
+        swaps.append((step, tuple(lost), es.shrink(lost)))
+        return None                             # state/step_fn unchanged
+
+    loop = FaultTolerantLoop(tmp_path, ckpt_every=100, rank_loss=sig,
+                             on_rank_loss=on_rank_loss)
+    state, done = loop.run(
+        {"x": np.float32(0)}, lambda st, s: {"x": st["x"] + 1.0},
+        start_step=0, num_steps=6,
+        on_step=lambda step, st: sig.trigger([4, 5, 6, 7])
+        if step == 3 else None)
+
+    assert done == 6 and float(state["x"]) == 6.0   # never restarted
+    assert len(swaps) == 1
+    step, lost, report = swaps[0]
+    assert step == 3 and lost == (4, 5, 6, 7)
+    assert es.topo.nranks == 4 and report.generation == 1
+    # the pre-swap state was persisted with the loss manifest
+    from repro.checkpoint import restore_checkpoint
+    tree, meta = restore_checkpoint(tmp_path, {"x": np.float32(0)}, step=3)
+    assert meta["lost_ranks"] == [4, 5, 6, 7]
+    assert float(tree["x"]) == 3.0
+    # re-derived schedules match a fresh build on the survivors
+    for name, (coll, algo) in _ENTRIES.items():
+        assert es.schedule_for(name).fingerprint() == \
+            REGISTRY[coll][algo](es.topo).fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# the whole fleet loop: drift heal, then rank loss, one run
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_end_to_end_drift_then_shrink(tmp_path):
+    fault = LinkFault()
+    d = _daemon(tmp_path, fault=fault)
+    es = ElasticScheduleSet(d.topo, _ENTRIES)
+    sig = RankLossSignal()
+    events = []
+
+    def on_step(step, state):
+        if step == 2:
+            fault.degrade(0, beta_scale=16.0)   # DCN collapses...
+        report = d.tick(step)
+        if report is not None and report.healed:
+            events.append(("healed", step, report))
+        if step == 4:
+            sig.trigger([0, 1, 2, 3])           # ...then pod 0 dies
+
+    def on_rank_loss(state, step, lost):
+        events.append(("shrunk", step, es.shrink(lost)))
+        return None
+
+    loop = FaultTolerantLoop(tmp_path, ckpt_every=100, rank_loss=sig,
+                             on_rank_loss=on_rank_loss)
+    state, done = loop.run(
+        {"x": np.float32(0)}, lambda st, s: {"x": st["x"] + 1.0},
+        start_step=0, num_steps=6, on_step=on_step)
+
+    assert done == 6 and float(state["x"]) == 6.0
+    assert [e[0] for e in events] == ["healed", "shrunk"]
+    _, heal_step, heal = events[0]
+    assert heal_step == 2 and heal.drifted_levels == (0,)
+    assert 0 < len(heal.affected_cells) < heal.total_cells
+    _, shrink_step, swap = events[1]
+    assert shrink_step == 4 and es.topo.nranks == 4
+    for name, (coll, algo) in _ENTRIES.items():
+        assert es.schedule_for(name).fingerprint() == \
+            REGISTRY[coll][algo](es.topo).fingerprint()

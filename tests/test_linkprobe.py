@@ -1,0 +1,260 @@
+"""Wire-measurement pass: probe schedules, fits, measured fingerprints.
+
+The probe pass feeds persisted tuned tables and every downstream cost
+model, so these tests pin the full contract:
+
+  * probe schedules are legal IR (validated like any collective's);
+  * ``fit_link_model`` recovers exact coefficients from model-priced
+    samples and fails loud on degenerate data — and ``LinkModel`` itself
+    rejects non-finite/negative coefficients no matter who builds it;
+  * ``measured_topology`` keys the geometry by measurement: the
+    fingerprint grows an ``lm[...]`` section that round-trips, including
+    under sanitized device kinds ("TPU v5e");
+  * ``drifted_levels`` is noise-tolerant (ratio rule) and refuses to
+    compare unlike geometries.
+"""
+import math
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra not installed: seeded fallback
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import linkprobe
+from repro.core.linkprobe import (
+    DEFAULT_PROBE_SIZES, drifted_levels, fit_link_model,
+    injection_schedule, measured_topology, model_timer, pingpong_schedule,
+    probe_links)
+from repro.core.topology import (DCN_LINK, ICI_LINK, LinkModel, TopoLevel,
+                                 Topology, torus_topology)
+from repro.core.transport import SimTransport
+from repro.runtime.fault import LinkFault
+
+TOPO = Topology.from_levels([
+    TopoLevel("dcn", 2, DCN_LINK, dcn=True),
+    TopoLevel("ici", 4, ICI_LINK),
+])
+
+
+# ---------------------------------------------------------------------------
+# LinkModel validation (S4: reject junk at the source)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alpha,beta", [
+    (float("nan"), 1e-10), (1e-6, float("nan")),
+    (float("inf"), 1e-10), (1e-6, float("inf")),
+    (-1e-6, 1e-10), (1e-6, -1e-10),
+    ("1e-6", 1e-10), (1e-6, None), (True, 1e-10),
+])
+def test_link_model_rejects_bad_coefficients(alpha, beta):
+    with pytest.raises(ValueError):
+        LinkModel(alpha=alpha, beta=beta)
+
+
+def test_link_model_coerces_to_float():
+    lm = LinkModel(alpha=1, beta=0)
+    assert isinstance(lm.alpha, float) and isinstance(lm.beta, float)
+    assert lm.time(1024.0) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# fitting
+# ---------------------------------------------------------------------------
+
+
+def test_fit_recovers_exact_model():
+    link = LinkModel(alpha=7e-6, beta=3e-11)
+    samples = [(float(s), link.time(float(s)))
+               for s in (1 << 10, 1 << 16, 1 << 20)]
+    fit = fit_link_model(samples)
+    assert math.isclose(fit.alpha, link.alpha, rel_tol=1e-9)
+    assert math.isclose(fit.beta, link.beta, rel_tol=1e-9)
+
+
+@pytest.mark.parametrize("samples,msg", [
+    ([(1024.0, 1e-5)], ">= 2 probe samples"),
+    ([(1024.0, 1e-5), (1024.0, 2e-5)], "distinct values"),
+    ([(1024.0, float("nan")), (2048.0, 1e-5)], "non-finite probe"),
+    ([(float("inf"), 1e-5), (2048.0, 1e-5)], "non-finite probe"),
+    # time shrinking with size -> negative beta
+    ([(1024.0, 1e-3), (1 << 20, 1e-5)], "negative fit"),
+    # steep slope through a small intercept -> negative alpha
+    ([(100.0, 1.0), (200.0, 3.0)], "negative fit"),
+])
+def test_fit_rejects_degenerate_data(samples, msg):
+    with pytest.raises(ValueError, match=msg):
+        fit_link_model(samples)
+
+
+# ---------------------------------------------------------------------------
+# probe schedules are legal IR
+# ---------------------------------------------------------------------------
+
+
+def test_pingpong_schedule_shape_and_semantics():
+    sched = pingpong_schedule(TOPO, 0)
+    assert sched.num_slots == 1 and len(sched.rounds) == 2
+    # the probe really moves data over the level's canonical link and
+    # brings it home: running it is the identity on rank 0's slot
+    buf = np.arange(8, dtype=np.float32).reshape(8, 1, 1)
+    out = SimTransport(8).run(sched, buf)
+    assert out[0, 0, 0] == buf[0, 0, 0]
+
+
+def test_pingpong_rejects_unprobeable_levels():
+    with pytest.raises(ValueError, match="out of range"):
+        pingpong_schedule(TOPO, 5)
+    one = Topology.from_levels([TopoLevel("solo", 1, ICI_LINK),
+                                TopoLevel("ici", 4, ICI_LINK)])
+    with pytest.raises(ValueError, match="nothing to probe"):
+        pingpong_schedule(one, 0)
+
+
+def test_injection_schedule_serializes_distinct_peers():
+    sched = injection_schedule(TOPO, 1, fanout=4)
+    assert len(sched.rounds) == 3        # clamped to level size - 1
+    dsts = [d for r in sched.rounds for _, d in r.perm]
+    assert len(set(dsts)) == len(dsts)
+    # every peer differs from rank 0 only at the probed level
+    for d in dsts:
+        c = TOPO.coords(d)
+        assert c[0] == 0 and c[1] != 0
+
+
+# ---------------------------------------------------------------------------
+# the probe pass + measured fingerprints
+# ---------------------------------------------------------------------------
+
+
+def test_model_probe_recovers_link_models_exactly():
+    res = probe_links(TOPO, timer=model_timer(TOPO))
+    assert res.source == "custom" and not res.skipped
+    for i, lv in enumerate(TOPO.levels):
+        assert math.isclose(res.models[i].alpha, lv.link.alpha,
+                            rel_tol=1e-6)
+        assert math.isclose(res.models[i].beta, lv.link.beta,
+                            rel_tol=1e-6)
+
+
+def test_measured_topology_keys_by_lm_section():
+    meas = measured_topology(TOPO, timer=model_timer(TOPO))
+    fp = meas.fingerprint()
+    assert ":lm[" in fp
+    assert Topology.from_fingerprint(fp) == meas
+    # geometry untouched: same levels, same validation-relevant shape
+    assert [(l.name, l.size, l.dcn) for l in meas.levels] == \
+           [(l.name, l.size, l.dcn) for l in TOPO.levels]
+    assert meas.fingerprint() != TOPO.fingerprint()
+
+
+def test_size1_levels_are_skipped_not_fatal():
+    t = Topology.from_levels([TopoLevel("solo", 1, DCN_LINK, dcn=True),
+                              TopoLevel("ici", 4, ICI_LINK)])
+    res = probe_links(t, timer=model_timer(t))
+    assert 0 in res.skipped and 0 not in res.models
+    assert measured_topology(t, res).levels[0].link == DCN_LINK
+
+
+def test_rejected_fit_skips_level_unless_strict():
+    def broken(level, nbytes):
+        return float("nan") if level == 0 else \
+            model_timer(TOPO)(level, nbytes)
+
+    res = probe_links(TOPO, timer=broken)
+    assert 0 in res.skipped and 1 in res.models
+    with pytest.raises(ValueError, match="non-finite"):
+        probe_links(TOPO, timer=broken, strict=True)
+
+
+def test_probe_needs_two_distinct_sizes():
+    with pytest.raises(ValueError, match="distinct probe sizes"):
+        probe_links(TOPO, sizes=(1024, 1024), timer=model_timer(TOPO))
+
+
+def test_fault_injection_is_observed_per_level():
+    fault = LinkFault()
+    fault.degrade(0, beta_scale=16.0)
+    res = probe_links(TOPO, timer=model_timer(TOPO, fault=fault))
+    assert math.isclose(res.models[0].beta, DCN_LINK.beta * 16.0,
+                        rel_tol=1e-6)
+    assert math.isclose(res.models[0].alpha, DCN_LINK.alpha, rel_tol=1e-6)
+    assert math.isclose(res.models[1].beta, ICI_LINK.beta, rel_tol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# drift detection
+# ---------------------------------------------------------------------------
+
+
+def test_drifted_levels_ratio_rule():
+    base = measured_topology(TOPO, timer=model_timer(TOPO))
+    assert drifted_levels(base, base) == []
+    # within tolerance: not drift
+    fault = LinkFault()
+    fault.degrade(0, beta_scale=1.1)
+    near = measured_topology(TOPO, timer=model_timer(TOPO, fault=fault))
+    assert drifted_levels(base, near, tol=1.25) == []
+    # past tolerance, in either direction, on either coefficient
+    fault.degrade(0, beta_scale=16.0)
+    far = measured_topology(TOPO, timer=model_timer(TOPO, fault=fault))
+    assert drifted_levels(base, far, tol=1.25) == [0]
+    assert drifted_levels(far, base, tol=1.25) == [0]
+    fault.clear()
+    fault.degrade(1, alpha_scale=3.0)
+    lat = measured_topology(TOPO, timer=model_timer(TOPO, fault=fault))
+    assert drifted_levels(base, lat, tol=1.25) == [1]
+
+
+def test_drift_refuses_geometry_changes():
+    with pytest.raises(ValueError, match="elastic remesh"):
+        drifted_levels(TOPO, torus_topology(2, 2, 2))
+
+
+# ---------------------------------------------------------------------------
+# fingerprint round-trip with measured lm[] sections (property, S4)
+# ---------------------------------------------------------------------------
+
+
+_ALPHAS = (1e-6, 2.5e-6, 1e-5, 3.3e-5)
+_BETAS = (1 / 25e9, 1 / 50e9, 1 / 12.5e9, 7.7e-11)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_measured_fingerprint_roundtrip_random_levels(seed):
+    """Random level stacks, probed through a model timer whose links
+    were themselves randomized: the measured topology's fingerprint —
+    lm[] overrides included — survives from_fingerprint under every
+    device-kind sanitization ("TPU v5e" has a space)."""
+    rng = np.random.default_rng(seed)
+    lvls = []
+    for i in range(int(rng.integers(1, 5))):
+        link = LinkModel(alpha=float(_ALPHAS[rng.integers(4)]),
+                         beta=float(_BETAS[rng.integers(4)]))
+        lvls.append(TopoLevel(f"ax{i}", int(rng.integers(1, 5)), link,
+                              dcn=bool(rng.integers(0, 2))))
+    # dcn flags must be a prefix for from_levels ordering invariants
+    lvls = sorted(lvls, key=lambda l: not l.dcn)
+    topo = Topology.from_levels(lvls)
+    meas = measured_topology(topo, timer=model_timer(topo))
+    for kind in ("model", "cpu", "TPU v5e"):
+        fp = meas.fingerprint(kind)
+        back = Topology.from_fingerprint(fp)
+        assert back == meas, (fp, back, meas)
+        assert back.fingerprint(kind) == fp
+        assert " " not in fp          # "TPU v5e" sanitized
+    # measured levels (size >= 2) carry their fitted coefficients
+    for i, lv in enumerate(topo.levels):
+        if lv.size >= 2:
+            got = meas.levels[i].link
+            assert math.isclose(got.alpha, lv.link.alpha, rel_tol=1e-6)
+            assert math.isclose(got.beta, lv.link.beta, rel_tol=1e-6)
+
+
+def test_default_probe_sizes_span_alpha_and_beta():
+    lo, hi = min(DEFAULT_PROBE_SIZES), max(DEFAULT_PROBE_SIZES)
+    assert ICI_LINK.alpha > ICI_LINK.beta * lo    # small: alpha-dominated
+    assert DCN_LINK.beta * hi > DCN_LINK.alpha    # large: beta-dominated

@@ -1,0 +1,214 @@
+"""Regression tests for the runtime fault-path fixes.
+
+Three production-shaped bugs, each with the scenario that exposed it:
+
+  * a straggler that *recovers* must reclaim its home data shard — the
+    old rebalance only ever moved shards away, stranding a transiently
+    slow host shard-less with its donor permanently overloaded;
+  * ``PreemptionSignal(install_handlers=True)`` must latch BOTH
+    SIGTERM (cluster schedulers) and SIGINT (interactive runs), chain a
+    previously installed callable handler, and *not* chain the default
+    SIGINT handler (which would raise KeyboardInterrupt and abort the
+    final checkpoint the latch exists to protect);
+  * preemption landing exactly on a periodic checkpoint boundary must
+    commit exactly ONE checkpoint for that step, not two (the second
+    save doubled checkpoint I/O at the worst possible moment and raced
+    the in-flight async write).
+"""
+import signal
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint
+from repro.runtime.fault import FaultTolerantLoop, PreemptionSignal
+from repro.runtime.straggler import StragglerMonitor
+
+
+# ---------------------------------------------------------------------------
+# S1: straggler recovery
+# ---------------------------------------------------------------------------
+
+
+def _feed(mon, host, t, n=16):
+    for _ in range(n):
+        mon.record(host, t)
+
+
+def test_recovered_straggler_reclaims_home_shard():
+    mon = StragglerMonitor(num_hosts=4, threshold=1.5, window=8)
+    for h in range(3):
+        _feed(mon, h, 1.0, n=8)
+    _feed(mon, 3, 10.0, n=8)
+    assign = mon.rebalance()
+    assert mon.stragglers() == [3]
+    assert assign[3] == []
+    donor = next(h for h, s in assign.items() if 3 in s)
+
+    # host 3 recovers: fast samples push its windowed median back under
+    # threshold, and the next rebalance hands the shard home
+    _feed(mon, 3, 1.0, n=8)
+    assert mon.stragglers() == []
+    assign = mon.rebalance()
+    assert assign[3] == [3]
+    assert 3 not in assign[donor]
+    assert sorted(s for shards in assign.values()
+                  for s in shards) == [0, 1, 2, 3]
+
+
+def test_recovery_runs_even_with_no_current_stragglers():
+    """The reclaim pass must not hide behind the no-stragglers early
+    return: by the time the slow host looks healthy again there may be
+    nothing flagged, and that is exactly when it needs its shard back."""
+    mon = StragglerMonitor(num_hosts=3, threshold=1.5, window=4)
+    # shard 2 was evicted to host 0 in some earlier epoch
+    mon.assignment = {0: [0, 2], 1: [1], 2: []}
+    for h in range(3):
+        _feed(mon, h, 1.0, n=4)
+    assert mon.stragglers() == []
+    assign = mon.rebalance()
+    assert assign == {0: [0], 1: [1], 2: [2]}
+
+
+def test_unknown_host_stays_evicted():
+    """No estimate yet != healthy: a host that has not reported step
+    times keeps its shard with the donor until it proves itself."""
+    mon = StragglerMonitor(num_hosts=3, threshold=1.5, window=4)
+    mon.assignment = {0: [0, 2], 1: [1], 2: []}
+    _feed(mon, 0, 1.0, n=4)
+    _feed(mon, 1, 1.0, n=4)
+    # host 2 silent
+    assign = mon.rebalance()
+    assert assign[2] == [] and 2 in assign[0]
+
+
+def test_still_slow_host_stays_evicted():
+    mon = StragglerMonitor(num_hosts=4, threshold=1.5, window=8)
+    for h in range(3):
+        _feed(mon, h, 1.0, n=8)
+    _feed(mon, 3, 10.0, n=8)
+    mon.rebalance()
+    _feed(mon, 3, 10.0, n=8)        # still slow
+    assign = mon.rebalance()
+    assert assign[3] == []
+
+
+# ---------------------------------------------------------------------------
+# S2: preemption signal handlers
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def _restore_signals():
+    prev = {sig: signal.getsignal(sig)
+            for sig in (signal.SIGTERM, signal.SIGINT)}
+    yield
+    for sig, h in prev.items():
+        signal.signal(sig, h)
+
+
+@pytest.mark.parametrize("sig", [signal.SIGTERM, signal.SIGINT])
+def test_install_handlers_latches_both_signals(_restore_signals, sig):
+    ps = PreemptionSignal(install_handlers=True)
+    try:
+        assert not ps.preempted
+        signal.raise_signal(sig)
+        assert ps.preempted
+    finally:
+        ps.uninstall()
+
+
+def test_prior_callable_handler_is_chained(_restore_signals):
+    hits = []
+    signal.signal(signal.SIGTERM, lambda s, f: hits.append(s))
+    ps = PreemptionSignal(install_handlers=True)
+    try:
+        signal.raise_signal(signal.SIGTERM)
+        assert ps.preempted
+        assert hits == [signal.SIGTERM]
+    finally:
+        ps.uninstall()
+
+
+def test_default_sigint_handler_is_not_chained(_restore_signals):
+    """SIGINT's default handler raises KeyboardInterrupt — chaining it
+    would abort before the final checkpoint.  The latch replaces it."""
+    signal.signal(signal.SIGINT, signal.default_int_handler)
+    ps = PreemptionSignal(install_handlers=True)
+    try:
+        signal.raise_signal(signal.SIGINT)   # must NOT raise
+        assert ps.preempted
+    finally:
+        ps.uninstall()
+
+
+def test_install_is_idempotent_and_uninstall_restores(_restore_signals):
+    def prior(s, f):
+        pass
+
+    signal.signal(signal.SIGTERM, prior)
+    ps = PreemptionSignal(install_handlers=True)
+    try:
+        installed = signal.getsignal(signal.SIGTERM)
+        ps.install()                         # second install: no-op
+        assert signal.getsignal(signal.SIGTERM) is installed
+    finally:
+        ps.uninstall()
+    assert signal.getsignal(signal.SIGTERM) is prior
+
+
+# ---------------------------------------------------------------------------
+# S3: one committed checkpoint per step
+# ---------------------------------------------------------------------------
+
+
+def _counting_loop(tmp_path, **kw):
+    loop = FaultTolerantLoop(tmp_path, **kw)
+    counts, metas = {}, {}
+    orig = loop.ckpt.save
+
+    def spy(step, tree, meta=None):
+        counts[step] = counts.get(step, 0) + 1
+        metas[step] = meta
+        orig(step, tree, meta=meta)
+
+    loop.ckpt.save = spy
+    return loop, counts, metas
+
+
+def _step_fn(state, step):
+    return {"x": state["x"] + 1.0}
+
+
+def test_preemption_on_ckpt_boundary_saves_once(tmp_path):
+    loop, counts, metas = _counting_loop(tmp_path, ckpt_every=3)
+    sig = loop.preemption
+    state, stopped = loop.run(
+        {"x": np.float32(0)}, _step_fn, start_step=0, num_steps=10,
+        on_step=lambda step, st: sig.trigger() if step == 3 else None)
+    assert stopped == 3
+    # the periodic save at step 3 is the one and only commit
+    assert counts == {3: 1}, counts
+    assert latest_step(tmp_path) == 3
+    tree, meta = restore_checkpoint(tmp_path, {"x": np.float32(0)})
+    assert meta["next_step"] == 3 and float(tree["x"]) == 3.0
+
+
+def test_preemption_off_boundary_saves_final_checkpoint(tmp_path):
+    loop, counts, metas = _counting_loop(tmp_path, ckpt_every=3)
+    sig = loop.preemption
+    _, stopped = loop.run(
+        {"x": np.float32(0)}, _step_fn, start_step=0, num_steps=10,
+        on_step=lambda step, st: sig.trigger() if step == 2 else None)
+    assert stopped == 2
+    assert counts == {2: 1}
+    assert metas[2]["preempted"] is True
+
+
+def test_final_step_on_ckpt_boundary_saves_once(tmp_path):
+    loop, counts, metas = _counting_loop(tmp_path, ckpt_every=3)
+    _, done = loop.run({"x": np.float32(0)}, _step_fn,
+                       start_step=0, num_steps=6)
+    assert done == 6
+    assert counts == {3: 1, 6: 1}, counts
+    assert latest_step(tmp_path) == 6
