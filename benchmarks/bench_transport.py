@@ -25,6 +25,15 @@ Sections, tracking the compiled-executor wins from that PR onward:
                     loss must re-derive every registered schedule
                     bit-exact for the shrunk topology.  Model-level,
                     machine-independent, BLOCKING under ``--check``.
+  * ``chaos``     — resilience (the fault-injection PR): seeded fault
+                    campaigns (corrupt / fail / hang / mixed) against
+                    the sim substrate must recover BITWISE-identical
+                    results through the verify->retry->fallback ladder;
+                    persistent faults must end in a typed
+                    ``UnrecoverableError`` after a bounded walk; and
+                    verification pricing must stay ordered
+                    (off = 0 < canary < full).  BLOCKING under
+                    ``--check``.
 
 CLI:
     PYTHONPATH=src python -m benchmarks.bench_transport \
@@ -481,6 +490,119 @@ def bench_fleet() -> dict:
     return {"heal": heal, "elastic": elastic}
 
 
+def bench_chaos() -> dict:
+    """Chaos-resilience section (the fault-injection PR).
+
+    Deterministic on the sim substrate (seeded ``FaultPlan`` + sim /
+    reference rungs), so every claim is machine-independent and
+    BLOCKING under ``--check``:
+
+      * every seeded campaign (corrupt / fail / hang / mixed) recovers
+        a result region **bitwise identical** to the fault-free oracle;
+      * a persistent fault on every rung raises the typed
+        ``UnrecoverableError`` after a BOUNDED ladder walk (rungs x
+        (1 + retries) attempts — backoff can't spin forever);
+      * verification pricing (``tuner.verify_overhead_s``): canary
+        costs a strict fraction of the collective it protects and full
+        verification strictly more than canary (off = 0).
+    """
+    from repro.core import chaos, tuner
+    from repro.core.algorithms import REGISTRY
+    from repro.core.resilient import (ResilienceOptions, ResilientExec,
+                                      UnrecoverableError)
+    from repro.core.topology import flat_topology
+    from repro.core.transport import SimTransport
+
+    topo = flat_topology(8)
+    sched = REGISTRY["allgather"]["ring"](topo)
+    rng = np.random.default_rng(0)
+    buf = rng.integers(-8, 8,
+                       (8, sched.num_slots, FEAT)).astype(np.float32)
+
+    def region(out):
+        out = np.asarray(out)
+        rows = sched.result_slots
+        return np.stack([out[r, sched.out_offset(r):
+                             sched.out_offset(r) + rows]
+                         for r in range(sched.nranks)])
+
+    want = region(SimTransport(8).run_reference(sched, buf))
+    campaigns = {}
+    for campaign in ("corrupt", "fail", "hang", "mixed"):
+        ok, max_attempts, retries = True, 0, 0
+        t0 = time.time()
+        for seed in range(5):
+            plan = chaos.FaultPlan(seed, campaign, delay_s=0.002)
+            ex = ResilientExec(
+                sched, topo,
+                options=ResilienceOptions(verify="full",
+                                          ladder=("sim", "reference"),
+                                          backoff_s=1e-5),
+                transports={"sim": chaos.wrap(SimTransport(8), plan)})
+            out, rep = ex.run(buf)
+            ok &= region(out).tobytes() == want.tobytes()
+            max_attempts = max(max_attempts, len(rep.attempts))
+            retries += rep.retries
+        campaigns[campaign] = {
+            "recovered_bitwise": bool(ok),
+            "max_attempts": max_attempts,
+            "retries": retries,
+            "walltime_s": round(time.time() - t0, 4),
+        }
+        assert ok, (campaign, campaigns[campaign])
+        emit("transport", f"chaos.{campaign}.recovered",
+             "bitwise" if ok else "MISMATCH", "",
+             f"{retries} retries over 5 seeds")
+    # persistent fault on every rung -> typed error, bounded walk
+    plan = chaos.FaultPlan(0, "fail", times=None)
+    wrapped = chaos.wrap(SimTransport(8), plan)
+    opts = ResilienceOptions(verify="off", max_retries=1,
+                             ladder=("sim", "reference"), backoff_s=1e-5)
+    bound = len(opts.ladder) * (opts.max_retries + 1)
+    try:
+        ResilientExec(sched, None, options=opts,
+                      transports={"sim": wrapped,
+                                  "reference": wrapped}).run(buf)
+        unrec = {"typed": False, "attempts": 0, "bounded": False}
+    except UnrecoverableError as e:
+        att = len(e.report.attempts)
+        unrec = {"typed": True, "attempts": att,
+                 "bounded": att == bound}
+    assert unrec["typed"] and unrec["bounded"], unrec
+    emit("transport", "chaos.unrecoverable",
+         f"{unrec['attempts']} attempts", "",
+         "typed error, bounded walk")
+    # verification pricing: canary is a strict fraction of the
+    # collective; full strictly dearer than canary
+    slot_nbytes = 1 << 20
+    t_coll = sched.modeled_time(topo, slot_nbytes)
+    canary_s = tuner.verify_overhead_s(sched, topo,
+                                       slot_nbytes=slot_nbytes,
+                                       verify="canary")
+    full_s = tuner.verify_overhead_s(sched, topo,
+                                     slot_nbytes=slot_nbytes,
+                                     verify="full")
+    pricing = {
+        "modeled_collective_s": t_coll,
+        "off_s": tuner.verify_overhead_s(sched, topo,
+                                         slot_nbytes=slot_nbytes,
+                                         verify="off"),
+        "canary_s": canary_s,
+        "full_s": full_s,
+        "canary_frac": round(canary_s / t_coll, 6),
+        "full_frac": round(full_s / t_coll, 6),
+    }
+    assert pricing["off_s"] == 0.0
+    assert 0.0 < pricing["canary_frac"] < 0.5 < pricing["full_frac"], \
+        pricing
+    emit("transport", "chaos.verify.canary",
+         pricing["canary_frac"], "x collective", "O(result) scan")
+    emit("transport", "chaos.verify.full",
+         pricing["full_frac"], "x collective", "reference re-execution")
+    return {"campaigns": campaigns, "unrecoverable": unrec,
+            "verify_pricing": pricing}
+
+
 def payload() -> dict:
     from repro.core import executor
 
@@ -493,6 +615,7 @@ def payload() -> dict:
     data["makespan"] = bench_makespan()
     data["pallas"] = bench_pallas()
     data["fleet"] = bench_fleet()
+    data["chaos"] = bench_chaos()
     data["sim_exec"] = bench_sim_exec()
     data["shardmap"] = bench_shardmap_traces()
     data["elapsed_s"] = round(time.time() - t0, 3)
@@ -607,6 +730,37 @@ def check_against(baseline_path: str, data: dict) -> None:
     print(f"# fleet: healed {heal['cells_retuned']}/{heal['cells_total']}"
           f" cells (scoped), elastic re-derived {el['rederived']} "
           f"schedules bit-exact", file=sys.stderr)
+    # chaos section: seeded fault campaigns on the deterministic sim
+    # substrate — every claim machine-independent and blocking
+    ch = data.get("chaos")
+    if ch is None:
+        raise SystemExit(
+            "--check: current run's payload lacks the chaos section")
+    for campaign, row in sorted(ch.get("campaigns", {}).items()):
+        if not row.get("recovered_bitwise"):
+            raise SystemExit(
+                f"--check: chaos campaign {campaign!r} no longer "
+                f"recovers bitwise: {row!r}")
+    if len(ch.get("campaigns", {})) < 4:
+        raise SystemExit(
+            f"--check: chaos section lost campaigns (need corrupt/fail/"
+            f"hang/mixed): {sorted(ch.get('campaigns', {}))!r}")
+    unrec = ch.get("unrecoverable", {})
+    if not unrec.get("typed") or not unrec.get("bounded"):
+        raise SystemExit(
+            f"--check: persistent faults must end in a typed "
+            f"UnrecoverableError after a bounded ladder walk: {unrec!r}")
+    pr = ch.get("verify_pricing", {})
+    if not (pr.get("off_s") == 0.0
+            and 0.0 < float(pr.get("canary_frac", 0))
+            < float(pr.get("full_frac", 0))):
+        raise SystemExit(
+            f"--check: verify pricing ordering lost (off=0 < canary < "
+            f"full): {pr!r}")
+    print(f"# chaos: {len(ch['campaigns'])} campaigns bitwise-recovered,"
+          f" unrecoverable walk bounded at {unrec['attempts']} attempts,"
+          f" canary={pr['canary_frac']}x full={pr['full_frac']}x",
+          file=sys.stderr)
 
 
 def main(argv=()) -> dict:

@@ -1,2 +1,3 @@
 from repro.checkpoint.store import (  # noqa: F401
-    save_checkpoint, restore_checkpoint, latest_step, AsyncCheckpointer)
+    save_checkpoint, restore_checkpoint, latest_step, committed_steps,
+    CheckpointCorruptError, AsyncCheckpointer)

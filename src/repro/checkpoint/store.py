@@ -32,6 +32,16 @@ import jax
 _MARKER = "_COMMITTED"
 
 
+class CheckpointCorruptError(RuntimeError):
+    """A committed checkpoint could not be restored intact: truncated or
+    bit-flipped shard file, unparseable manifest, missing leaf, shape or
+    byte-count mismatch.  Typed so recovery code
+    (``FaultTolerantLoop.resume_or_init``) can fall back to the newest
+    *intact* checkpoint instead of crashing — while genuine programming
+    errors (a tree_like that doesn't match the run) still surface with
+    the full underlying cause chained."""
+
+
 def _to_savable(arr: np.ndarray) -> np.ndarray:
     """npz can't serialize extension dtypes (bfloat16): store raw bytes."""
     if arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict:
@@ -92,43 +102,73 @@ def save_checkpoint(ckpt_dir, step: int, tree, *, num_shards: int = 1,
     return final
 
 
-def latest_step(ckpt_dir) -> int | None:
+def committed_steps(ckpt_dir) -> list[int]:
+    """Committed step numbers, newest first (the fallback walk order
+    for ``FaultTolerantLoop.resume_or_init``)."""
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
-        return None
+        return []
     steps = []
     for d in ckpt_dir.iterdir():
         if d.name.startswith("step_") and (d / _MARKER).exists():
             steps.append(int(d.name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps, reverse=True)
+
+
+def latest_step(ckpt_dir) -> int | None:
+    steps = committed_steps(ckpt_dir)
+    return steps[0] if steps else None
 
 
 def restore_checkpoint(ckpt_dir, tree_like, step: int | None = None):
     """Returns (tree of numpy arrays shaped like ``tree_like``, meta).
-    The caller re-places leaves under its current mesh (elastic)."""
+    The caller re-places leaves under its current mesh (elastic).
+    Raises ``CheckpointCorruptError`` when the committed step's files
+    are damaged (truncated shard, flipped manifest bytes, missing or
+    misshapen leaf)."""
     ckpt_dir = Path(ckpt_dir)
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
     d = ckpt_dir / f"step_{step:08d}"
-    manifest = json.loads((d / "manifest.json").read_text())
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+        num_shards = int(manifest["num_shards"])
+        leaves_meta = {m["path"]: (i, m) for i, m in
+                       enumerate(manifest["leaves"])}
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable manifest in {d}: {e!r}") from e
     shards = {}
-    for k in range(manifest["num_shards"]):
-        with np.load(d / f"shard_{k}.npz") as z:
-            shards.update({n: z[n] for n in z.files})
+    try:
+        for k in range(num_shards):
+            with np.load(d / f"shard_{k}.npz") as z:
+                shards.update({n: z[n] for n in z.files})
+    except Exception as e:  # zipfile/np.load raise a zoo of types on
+        raise CheckpointCorruptError(  # truncation and bad CRCs
+            f"unreadable shard in {d}: {e!r}") from e
     flat, tdef = jax.tree_util.tree_flatten_with_path(tree_like)
-    leaves_meta = {m["path"]: (i, m) for i, m in
-                   enumerate(manifest["leaves"])}
     out = []
     for kp, like in flat:
         path = jax.tree_util.keystr(kp)
         if path not in leaves_meta:
-            raise KeyError(f"checkpoint missing leaf {path}")
+            raise CheckpointCorruptError(
+                f"checkpoint {d} missing leaf {path}")
         i, m = leaves_meta[path]
-        arr = _from_savable(shards[f"leaf_{i}"], m["dtype"], m["shape"])
+        key = f"leaf_{i}"
+        if key not in shards:
+            raise CheckpointCorruptError(
+                f"checkpoint {d} shard files missing array for {path}")
+        try:
+            arr = _from_savable(shards[key], m["dtype"], m["shape"])
+        except (ValueError, TypeError) as e:  # bad dtype string, byte
+            raise CheckpointCorruptError(  # count not divisible, ...
+                f"checkpoint {d} leaf {path} undecodable: {e!r}") from e
         want = tuple(getattr(like, "shape", arr.shape))
-        assert tuple(arr.shape) == want, (path, arr.shape, want)
+        if tuple(arr.shape) != want:
+            raise CheckpointCorruptError(
+                f"checkpoint {d} leaf {path} shape {arr.shape} != {want}")
         out.append(arr)
     return jax.tree_util.tree_unflatten(tdef, out), manifest["meta"]
 

@@ -20,6 +20,7 @@ expose that layer.
 """
 from __future__ import annotations
 
+import time
 from typing import Sequence
 
 import jax
@@ -27,7 +28,11 @@ import jax.numpy as jnp
 
 from repro.core.topology import (DCN_LINK, ICI_LINK, TopoLevel, Topology)
 from repro.core.transport import (PallasTransport, ShardMapTransport,
-                                  _flat_rank)
+                                  TransportError, _flat_rank)
+from repro.core.schedule import NotApplicable
+from repro.core.resilient import (Attempt, DegradationReport,
+                                  UnrecoverableError, resolve_resilience)
+from repro.core import chaos as _chaos
 from repro.core import selector
 from repro.core.algorithms import REGISTRY
 
@@ -193,11 +198,158 @@ def _resolve_transport(transport: str, topo: Topology, nbytes: int,
     return transport
 
 
+# Process-wide chaos plan (``core.chaos.FaultPlan``): when set, every
+# transport the api constructs is wrapped so seeded faults fire on the
+# real mpix_* execution paths.  Test/CI-only; None in production.
+_CHAOS_PLAN = None
+
+
+def set_chaos(plan) -> None:
+    """Install (or clear, with None) the process-wide fault plan; all
+    subsequently constructed mpix_* transports are chaos-wrapped."""
+    global _CHAOS_PLAN
+    _CHAOS_PLAN = plan
+
+
+def get_chaos():
+    return _CHAOS_PLAN
+
+
+def _transport_instance(kind: str, topo: Topology, names):
+    cls = PallasTransport if kind == "pallas" else ShardMapTransport
+    return _chaos.wrap(cls(topo.nranks, names, topo=topo), _CHAOS_PLAN)
+
+
 def _make_transport(transport: str, topo: Topology, names, nbytes: int,
                     policy: str | None = None):
     kind = _resolve_transport(transport, topo, nbytes, policy)
-    cls = PallasTransport if kind == "pallas" else ShardMapTransport
-    return cls(topo.nranks, names, topo=topo)
+    return _transport_instance(kind, topo, names)
+
+
+# Degradation telemetry: every mpix_* call that needed the recovery
+# ladder appends its DegradationReport here; ``FaultTolerantLoop``
+# drains the list each step so a degraded mesh is *visible*, not silent.
+_DEGRADATIONS: list = []
+
+
+def last_degradation():
+    """The most recent DegradationReport (None when nothing degraded)."""
+    return _DEGRADATIONS[-1] if _DEGRADATIONS else None
+
+
+def take_degradations() -> list:
+    """Drain and return all accumulated DegradationReports."""
+    out = list(_DEGRADATIONS)
+    _DEGRADATIONS.clear()
+    return out
+
+
+def _execute(collective: str, run, *, algorithm: str, policy,
+             topo: Topology, nbytes: int, transport: str, resilience,
+             xla_ok: bool = True):
+    """Shared execution path of every mpix_* collective.
+
+    ``run(kind, algo)`` closes over the collective's buffers and does
+    one full attempt on transport ``kind`` ("shardmap"/"pallas", or
+    "xla" when ``algo == "xla"``).  Without ``resilience`` this is a
+    zero-overhead passthrough (today's behavior).  With it, the TRACE-
+    TIME recovery ladder runs: detected faults — a raised
+    ``TransportError`` (failed launch, injected chaos failure), an
+    ``NotApplicable`` refit miss, or a wall-clock deadline overrun (an
+    injected hang burns host time during tracing) — are retried with
+    exponential backoff, degraded to the other ppermute/pallas
+    substrate, refitted down the selector's algorithm ladder, and
+    finally routed to the substrate's native lowering
+    (``algorithm="xla"``, the system-MPI analogue) before a typed
+    ``UnrecoverableError`` is raised.
+
+    Honest taxonomy: values here are *traced*, so data-dependent
+    verification (canary/checksum) is impossible at this layer —
+    silent corruption is caught by the host-level ``ResilientExec``
+    (core.resilient), which the chaos registry sweep drives over all
+    three transports.  This layer recovers every *detected* fault.
+    """
+    _check_transport(transport)
+    if algorithm == "auto":
+        algorithm = selector.select(collective, topo, nbytes,
+                                    policy=policy or _DEFAULT_POLICY)
+    opts = resolve_resilience(resilience)
+    if algorithm == "xla":
+        return run("xla", "xla")
+    kind = _resolve_transport(transport, topo, nbytes, policy)
+    if opts is None:
+        return run(kind, algorithm)
+
+    report = DegradationReport(schedule=f"{collective}.{algorithm}",
+                               verify="off")
+
+    def finish(out, rung):
+        report.recovered_with = rung
+        if report.degraded:
+            _DEGRADATIONS.append(report)
+        return out
+
+    kinds = [kind] + [k for k in ("shardmap", "pallas") if k != kind]
+    for k in kinds:
+        delay = opts.backoff_s
+        for attempt in range(opts.max_retries + 1):
+            t0 = time.perf_counter()
+            try:
+                out = run(k, algorithm)
+            except TransportError as e:
+                report.attempts.append(Attempt(
+                    rung=k, algorithm=algorithm, attempt=attempt,
+                    outcome="fault", detail=str(e),
+                    seconds=time.perf_counter() - t0))
+                time.sleep(delay)
+                delay *= opts.backoff_mult
+                continue
+            dt = time.perf_counter() - t0
+            if opts.deadline_s is not None and dt > opts.deadline_s:
+                report.attempts.append(Attempt(
+                    rung=k, algorithm=algorithm, attempt=attempt,
+                    outcome="timeout", seconds=dt,
+                    detail=f"{dt:.4f}s > deadline {opts.deadline_s:.4f}s"))
+                time.sleep(delay)
+                delay *= opts.backoff_mult
+                continue
+            report.attempts.append(Attempt(
+                rung=k, algorithm=algorithm, attempt=attempt,
+                outcome="ok", seconds=dt))
+            return finish(out, k)
+    if opts.refit:
+        ladder = [a for a in selector._FIXED.get(collective, ())
+                  if a != algorithm]
+        ladder += [a for a in REGISTRY.get(collective, {})
+                   if a != algorithm and a not in ladder]
+        for cand in ladder:
+            try:
+                out = run(kinds[0], cand)
+            except (TransportError, NotApplicable) as e:
+                report.attempts.append(Attempt(
+                    rung="refit", algorithm=cand, attempt=0,
+                    outcome="fault" if isinstance(e, TransportError)
+                    else "skipped", detail=str(e) or type(e).__name__))
+                continue
+            report.attempts.append(Attempt(
+                rung="refit", algorithm=cand, attempt=0, outcome="ok"))
+            report.refit_algorithm = cand
+            return finish(out, kinds[0])
+    if xla_ok:
+        try:
+            out = run("xla", "xla")
+        except Exception as e:  # native lowering is best-effort terminal
+            report.attempts.append(Attempt(
+                rung="xla", algorithm="xla", attempt=0,
+                outcome="fault", detail=str(e)))
+        else:
+            report.attempts.append(Attempt(
+                rung="xla", algorithm="xla", attempt=0, outcome="ok"))
+            report.refit_algorithm = "xla"
+            return finish(out, "xla")
+    raise UnrecoverableError(
+        f"{collective} could not be recovered on any transport or "
+        f"algorithm", report)
 
 
 def _pad_to(x: jax.Array, mult: int):
@@ -214,100 +366,125 @@ def _pad_to(x: jax.Array, mult: int):
 def mpix_allgather(x: jax.Array, axis_names, *, algorithm: str = "auto",
                    policy: str | None = None,
                    topo: Topology | None = None,
-                   transport: str = "shardmap") -> jax.Array:
+                   transport: str = "shardmap",
+                   resilience=None) -> jax.Array:
     """Tiled allgather of the local shard along its leading dim."""
     names = _axes_tuple(axis_names)
     _check_transport(transport)
     topo = topo or topology_from_axes(names)
     nbytes = x.size * x.dtype.itemsize
-    tr = _make_transport(transport, topo, names, nbytes, policy)
-    algorithm, sched = _resolve("allgather", algorithm, topo, nbytes,
-                                policy)
-    if algorithm == "xla":
-        return jax.lax.all_gather(x, names, tiled=True)
     n = topo.nranks
-    buf = jnp.zeros((n,) + x.shape, x.dtype)
-    buf = buf.at[_flat_rank(names)].set(x)
-    out = tr.run(sched, buf)
-    return out.reshape((n * x.shape[0],) + x.shape[1:])
+
+    def run(kind, algo):
+        if algo == "xla":
+            return jax.lax.all_gather(x, names, tiled=True)
+        sched = _schedule("allgather", algo, topo)
+        tr = _transport_instance(kind, topo, names)
+        buf = jnp.zeros((n,) + x.shape, x.dtype)
+        buf = buf.at[_flat_rank(names)].set(x)
+        out = tr.run(sched, buf)
+        return out.reshape((n * x.shape[0],) + x.shape[1:])
+
+    return _execute("allgather", run, algorithm=algorithm, policy=policy,
+                    topo=topo, nbytes=nbytes, transport=transport,
+                    resilience=resilience)
 
 
 def mpix_allreduce(x: jax.Array, axis_names, *, algorithm: str = "auto",
                    policy: str | None = None,
                    topo: Topology | None = None,
-                   transport: str = "shardmap") -> jax.Array:
+                   transport: str = "shardmap",
+                   resilience=None) -> jax.Array:
     names = _axes_tuple(axis_names)
     _check_transport(transport)
     topo = topo or topology_from_axes(names)
     nbytes = x.size * x.dtype.itemsize
-    tr = _make_transport(transport, topo, names, nbytes, policy)
-    algorithm, sched = _resolve("allreduce", algorithm, topo, nbytes,
-                                policy)
-    if algorithm == "xla":
-        return jax.lax.psum(x, names)
     n = topo.nranks
-    flat = _pad_to(x, n)
-    out = tr.run(sched, flat.reshape(n, -1))
-    return out.reshape(-1)[: x.size].reshape(x.shape)
+
+    def run(kind, algo):
+        if algo == "xla":
+            return jax.lax.psum(x, names)
+        sched = _schedule("allreduce", algo, topo)
+        tr = _transport_instance(kind, topo, names)
+        flat = _pad_to(x, n)
+        out = tr.run(sched, flat.reshape(n, -1))
+        return out.reshape(-1)[: x.size].reshape(x.shape)
+
+    return _execute("allreduce", run, algorithm=algorithm, policy=policy,
+                    topo=topo, nbytes=nbytes, transport=transport,
+                    resilience=resilience)
 
 
 def mpix_reduce_scatter(x: jax.Array, axis_names, *,
                         algorithm: str = "auto",
                         policy: str | None = None,
                         topo: Topology | None = None,
-                        transport: str = "shardmap") -> jax.Array:
+                        transport: str = "shardmap",
+                        resilience=None) -> jax.Array:
     """Reduce along axes; scatter over the leading dim (must divide)."""
     names = _axes_tuple(axis_names)
     _check_transport(transport)
     topo = topo or topology_from_axes(names)
     nbytes = x.size * x.dtype.itemsize
-    tr = _make_transport(transport, topo, names, nbytes, policy)
-    algorithm, sched = _resolve("reduce_scatter", algorithm, topo, nbytes,
-                                policy)
-    if algorithm == "xla":
-        return jax.lax.psum_scatter(x, names, scatter_dimension=0,
-                                    tiled=True)
     n = topo.nranks
     if x.shape[0] % n:
         raise ValueError(
             f"mpix_reduce_scatter: leading dim {x.shape[0]} of input "
             f"shape {tuple(x.shape)} must be divisible by nranks={n} "
             f"(one scatter block per rank)")
-    blocks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
-    out = tr.run(sched, blocks)
-    return out[_flat_rank(names)]
+
+    def run(kind, algo):
+        if algo == "xla":
+            return jax.lax.psum_scatter(x, names, scatter_dimension=0,
+                                        tiled=True)
+        sched = _schedule("reduce_scatter", algo, topo)
+        tr = _transport_instance(kind, topo, names)
+        blocks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+        out = tr.run(sched, blocks)
+        return out[_flat_rank(names)]
+
+    return _execute("reduce_scatter", run, algorithm=algorithm,
+                    policy=policy, topo=topo, nbytes=nbytes,
+                    transport=transport, resilience=resilience)
 
 
 def mpix_alltoall(x: jax.Array, axis_names, *, algorithm: str = "auto",
                   policy: str | None = None,
                   topo: Topology | None = None,
-                  transport: str = "shardmap") -> jax.Array:
+                  transport: str = "shardmap",
+                  resilience=None) -> jax.Array:
     """Alltoall over the leading dim: in block d = data for rank d;
     out block s = data from rank s.  Leading dim must divide by nranks."""
     names = _axes_tuple(axis_names)
     _check_transport(transport)
     topo = topo or topology_from_axes(names)
     nbytes = x.size * x.dtype.itemsize
-    tr = _make_transport(transport, topo, names, nbytes, policy)
-    algorithm, sched = _resolve("alltoall", algorithm, topo, nbytes,
-                                policy)
     n = topo.nranks
     if x.shape[0] % n:
         raise ValueError(
             f"mpix_alltoall: leading dim {x.shape[0]} of input shape "
             f"{tuple(x.shape)} must be divisible by nranks={n} "
             f"(one block per destination rank)")
-    if algorithm == "xla":
-        # tiled alltoall: leading dim split into n segments; segment s of
-        # the output came from rank s.
-        return jax.lax.all_to_all(x, names, split_axis=0, concat_axis=0,
-                                  tiled=True)
-    blocks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
-    if sched.num_blocks > n:  # schedules with a separate recv region
-        pad = jnp.zeros((sched.num_blocks - n,) + blocks.shape[1:], x.dtype)
-        blocks = jnp.concatenate([blocks, pad], axis=0)
-    out = tr.run(sched, blocks)
-    return out[: sched.result_blocks].reshape(x.shape)
+
+    def run(kind, algo):
+        if algo == "xla":
+            # tiled alltoall: leading dim split into n segments; segment
+            # s of the output came from rank s.
+            return jax.lax.all_to_all(x, names, split_axis=0,
+                                      concat_axis=0, tiled=True)
+        sched = _schedule("alltoall", algo, topo)
+        tr = _transport_instance(kind, topo, names)
+        blocks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+        if sched.num_blocks > n:  # schedules with a separate recv region
+            pad = jnp.zeros((sched.num_blocks - n,) + blocks.shape[1:],
+                            x.dtype)
+            blocks = jnp.concatenate([blocks, pad], axis=0)
+        out = tr.run(sched, blocks)
+        return out[: sched.result_blocks].reshape(x.shape)
+
+    return _execute("alltoall", run, algorithm=algorithm, policy=policy,
+                    topo=topo, nbytes=nbytes, transport=transport,
+                    resilience=resilience)
 
 
 def mpix_alltoall_overlap(x: jax.Array, axis_names, consume, init, *,
@@ -315,7 +492,8 @@ def mpix_alltoall_overlap(x: jax.Array, axis_names, consume, init, *,
                           algorithm: str = "auto",
                           policy: str | None = None,
                           topo: Topology | None = None,
-                          transport: str = "shardmap"):
+                          transport: str = "shardmap",
+                          resilience=None):
     """Partitioned (pipelined) alltoall: the exchange runs in row
     chunks and each chunk's output is folded through
     ``consume(carry, out_chunk, i) -> carry`` as soon as it lands, so
@@ -334,7 +512,6 @@ def mpix_alltoall_overlap(x: jax.Array, axis_names, consume, init, *,
     _check_transport(transport)
     topo = topo or topology_from_axes(names)
     nbytes = x.size * x.dtype.itemsize
-    tr = _make_transport(transport, topo, names, nbytes, policy)
     n = topo.nranks
     if x.shape[0] % n:
         raise ValueError(
@@ -359,37 +536,45 @@ def mpix_alltoall_overlap(x: jax.Array, axis_names, consume, init, *,
     if chunks <= 1:
         return consume(init, mpix_alltoall(x, names, algorithm=algorithm,
                                            policy=policy, topo=topo,
-                                           transport=transport), 0)
+                                           transport=transport,
+                                           resilience=resilience), 0)
     rc = rows // chunks
-    algorithm, sched = _resolve("alltoall", algorithm, topo, nbytes,
-                                policy)
-    if algorithm == "xla":
-        blocks = x.reshape((n, chunks, rc) + x.shape[1:])
+    nchunks = chunks
 
-        def body(carry, xi):
-            xc, i = xi
-            out = jax.lax.all_to_all(
-                xc.reshape((n * rc,) + x.shape[1:]), names,
-                split_axis=0, concat_axis=0, tiled=True)
-            return consume(carry, out, i), None
+    def run(kind, algo):
+        if algo == "xla":
+            blocks = x.reshape((n, nchunks, rc) + x.shape[1:])
 
-        carry, _ = jax.lax.scan(
-            body, init, (blocks.swapaxes(0, 1),
-                         jnp.arange(chunks, dtype=jnp.int32)))
-        return carry
-    blocks = x.reshape((n, rows) + x.shape[1:])
-    if sched.num_blocks > n:  # schedules with a separate recv region
-        pad = jnp.zeros((sched.num_blocks - n,) + blocks.shape[1:],
-                        x.dtype)
-        blocks = jnp.concatenate([blocks, pad], axis=0)
+            def body(carry, xi):
+                xc, i = xi
+                out = jax.lax.all_to_all(
+                    xc.reshape((n * rc,) + x.shape[1:]), names,
+                    split_axis=0, concat_axis=0, tiled=True)
+                return consume(carry, out, i), None
 
-    def fold(carry, out_c, i):
-        out = (out_c[: sched.result_blocks]
-               .reshape((n * rc,) + x.shape[1:]))
-        return consume(carry, out, i)
+            carry, _ = jax.lax.scan(
+                body, init, (blocks.swapaxes(0, 1),
+                             jnp.arange(nchunks, dtype=jnp.int32)))
+            return carry
+        sched = _schedule("alltoall", algo, topo)
+        tr = _transport_instance(kind, topo, names)
+        blocks = x.reshape((n, rows) + x.shape[1:])
+        if sched.num_blocks > n:  # schedules with a separate recv region
+            pad = jnp.zeros((sched.num_blocks - n,) + blocks.shape[1:],
+                            x.dtype)
+            blocks = jnp.concatenate([blocks, pad], axis=0)
 
-    return tr.run_chunked(sched, blocks, chunks=chunks, consume=fold,
-                          init=init)
+        def fold(carry, out_c, i):
+            out = (out_c[: sched.result_blocks]
+                   .reshape((n * rc,) + x.shape[1:]))
+            return consume(carry, out, i)
+
+        return tr.run_chunked(sched, blocks, chunks=nchunks, consume=fold,
+                              init=init)
+
+    return _execute("alltoall", run, algorithm=algorithm, policy=policy,
+                    topo=topo, nbytes=nbytes, transport=transport,
+                    resilience=resilience)
 
 
 # ---------------------------------------------------------------------------
@@ -416,15 +601,23 @@ def make_neighbor_plan(graph, topo: Topology, *,
 
 
 def mpix_neighbor_alltoallv(x: jax.Array, axis_names, plan, *,
-                            transport: str = "shardmap") -> jax.Array:
+                            transport: str = "shardmap",
+                            resilience=None) -> jax.Array:
     """Execute a compiled ``NeighborPlan`` (call inside shard_map).
 
     ``x`` is this rank's [n_local_max, feat] value rows; returns
     [n_recv_max, feat] (rows past this rank's recv size are zeros)."""
     from repro.core.plan import run_shardmap
-    kind = _resolve_transport(transport, plan.topo,
-                              x.size * x.dtype.itemsize)
-    return run_shardmap(plan, x, _axes_tuple(axis_names), transport=kind)
+    names = _axes_tuple(axis_names)
+    nbytes = x.size * x.dtype.itemsize
+
+    def run(kind, algo):
+        return run_shardmap(plan, x, names, transport=kind)
+
+    return _execute("neighbor_alltoallv", run, algorithm=plan.name,
+                    policy=None, topo=plan.topo, nbytes=nbytes,
+                    transport=transport, resilience=resilience,
+                    xla_ok=False)
 
 
 # ---------------------------------------------------------------------------
@@ -437,7 +630,8 @@ def mpix_allreduce_rmsnorm(x: jax.Array, axis_names, scale: jax.Array, *,
                            algorithm: str = "auto",
                            policy: str | None = None,
                            topo: Topology | None = None,
-                           transport: str = "pallas") -> jax.Array:
+                           transport: str = "pallas",
+                           resilience=None) -> jax.Array:
     """Allreduce ``x`` over ``axis_names``, then rmsnorm the result —
     with the reduction's terminal round fused INTO the rmsnorm kernel.
 
@@ -452,17 +646,32 @@ def mpix_allreduce_rmsnorm(x: jax.Array, axis_names, scale: jax.Array, *,
     order differs from a ring reduction's).  On "shardmap" it falls
     back to ``mpix_allreduce`` followed by the plain kernel."""
     names = _axes_tuple(axis_names)
+    _check_transport(transport)
     topo = topo or topology_from_axes(names)
     from repro.kernels.rmsnorm import ops as rms_ops
     kind = _resolve_transport(transport, topo, x.size * x.dtype.itemsize,
                               policy)
     if kind == "pallas":
-        parts = jax.lax.all_gather(
-            x, names if len(names) > 1 else names[0])
-        parts = parts.reshape((topo.nranks,) + x.shape)
-        return rms_ops.rmsnorm_allreduce(parts, scale, eps, gemma_style)
+        try:
+            parts = jax.lax.all_gather(
+                x, names if len(names) > 1 else names[0])
+            parts = parts.reshape((topo.nranks,) + x.shape)
+            return rms_ops.rmsnorm_allreduce(parts, scale, eps,
+                                             gemma_style)
+        except TransportError as e:
+            if resolve_resilience(resilience) is None:
+                raise
+            # degrade the fused kernel to allreduce-then-normalize
+            # (resilient itself) and surface the decision
+            report = DegradationReport(
+                schedule="allreduce_rmsnorm.fused", verify="off")
+            report.attempts.append(Attempt(
+                rung="pallas", algorithm="fused", attempt=0,
+                outcome="fault", detail=str(e)))
+            report.recovered_with = "shardmap"
+            _DEGRADATIONS.append(report)
     y = mpix_allreduce(x, names, algorithm=algorithm, policy=policy,
-                       topo=topo)
+                       topo=topo, resilience=resilience)
     return rms_ops.rmsnorm(y, scale, eps, gemma_style)
 
 
@@ -473,4 +682,6 @@ __all__ = [
     "topology_from_axes", "set_default_policy", "get_default_policy",
     "ensure_tuned", "executor_cache_stats", "clear_executor_cache",
     "invalidate_topology", "TRANSPORTS",
+    "set_chaos", "get_chaos", "last_degradation", "take_degradations",
+    "UnrecoverableError", "DegradationReport",
 ]

@@ -37,6 +37,7 @@ tests and the CI healing leg).
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import math
 from typing import Callable, Mapping, Sequence
@@ -198,6 +199,36 @@ def wire_available(topo: Topology) -> bool:
     return jax.device_count() >= topo.nranks
 
 
+class ProbeTimeout(RuntimeError):
+    """One level's probe overran its deadline (a hung link, an injected
+    chaos stall).  ``probe_links`` converts this into a recorded skip —
+    the level keeps its prior link model — so a wedged wire can never
+    wedge the tuning daemon with it."""
+
+
+def _with_deadline(fn, deadline_s: float | None, what: str):
+    """Run ``fn()`` with a hard wall-clock bound: the call executes on a
+    worker thread and ``TimeoutError`` at the deadline becomes a typed
+    ``ProbeTimeout`` — the caller regains control even while the probe
+    is still blocked inside the substrate.  The abandoned worker is
+    detached (``shutdown(wait=False)``); a probe that eventually
+    returns finishes quietly on a dead-end thread."""
+    if deadline_s is None:
+        return fn()
+    if deadline_s <= 0:
+        raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+    pool = concurrent.futures.ThreadPoolExecutor(
+        max_workers=1, thread_name_prefix="repro-probe")
+    fut = pool.submit(fn)
+    try:
+        return fut.result(timeout=deadline_s)
+    except concurrent.futures.TimeoutError:
+        raise ProbeTimeout(
+            f"{what} exceeded deadline {deadline_s:.3f}s") from None
+    finally:
+        pool.shutdown(wait=False)
+
+
 # ---------------------------------------------------------------------------
 # the probe pass
 # ---------------------------------------------------------------------------
@@ -224,7 +255,8 @@ class ProbeResult:
 def probe_links(topo: Topology, *, sizes=DEFAULT_PROBE_SIZES,
                 repeats: int = 3, fanout: int = 2,
                 timer: Timer | None = None,
-                strict: bool = False) -> ProbeResult:
+                strict: bool = False,
+                deadline_s: float | None = None) -> ProbeResult:
     """Probe every topology level and fit a ``LinkModel`` per level.
 
     Per level: one ping-pong observation per probe size, plus
@@ -238,6 +270,14 @@ def probe_links(topo: Topology, *, sizes=DEFAULT_PROBE_SIZES,
     when its fit is rejected (noisy host clocks can produce a negative
     alpha on a short sweep) and records the reason in ``skipped``;
     ``strict=True`` re-raises — the mode tests use to assert rejection.
+
+    ``deadline_s`` bounds each LEVEL's whole observation sweep on a
+    worker thread (``_with_deadline``): a hung wire raises
+    ``ProbeTimeout`` internally, the level keeps its prior link, and
+    the timeout is recorded in ``skipped`` — under ``strict=True`` it
+    re-raises like a rejected fit.  Without it a single wedged link
+    would hang ``TuningDaemon.tick`` (and any serving loop that calls
+    it) forever.
     """
     if timer is None:
         source = "wire" if wire_available(topo) else "model"
@@ -255,12 +295,24 @@ def probe_links(topo: Topology, *, sizes=DEFAULT_PROBE_SIZES,
         if lv.size < 2:
             skipped[i] = "size-1 level (no link to probe)"
             continue
-        obs = [(float(s), timer(i, s)) for s in sizes]
-        # injection rounds at the smallest size: fanout more
-        # observations of the same one-way transfer (alpha-weighted)
-        eff_fanout = min(int(fanout), lv.size - 1)
-        obs += [(float(min(sizes)), timer(i, min(sizes)))
-                for _ in range(max(0, eff_fanout - 1))]
+
+        def observe(i=i, lv=lv):
+            obs = [(float(s), timer(i, s)) for s in sizes]
+            # injection rounds at the smallest size: fanout more
+            # observations of the same one-way transfer (alpha-weighted)
+            eff_fanout = min(int(fanout), lv.size - 1)
+            obs += [(float(min(sizes)), timer(i, min(sizes)))
+                    for _ in range(max(0, eff_fanout - 1))]
+            return obs
+
+        try:
+            obs = _with_deadline(observe, deadline_s,
+                                 f"probe of level {lv.name!r}")
+        except ProbeTimeout as e:
+            if strict:
+                raise
+            skipped[i] = f"{e} (kept prior link)"
+            continue
         samples[i] = tuple(obs)
         try:
             models[i] = fit_link_model(obs)

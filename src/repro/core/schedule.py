@@ -477,6 +477,45 @@ Round = CommRound
 Schedule = CommSchedule
 
 
+def add_canary_slot(schedule: CommSchedule) -> CommSchedule:
+    """Derive a schedule with one extra *canary* slot row that no round
+    reads, writes, or permutes — it rides through the transports'
+    staging buffers untouched.
+
+    Self-verifying execution (``core.resilient``) fills the canary row
+    with a seeded pattern before the run and compares it bitwise after:
+    buffer-wide data-plane corruption (a stray DMA, a flipped page, an
+    injected chaos fault) that lands on the canary is detected in one
+    O(slot) pass, without a second execution.  The transform is pure
+    geometry: round tables are unchanged (they index slots
+    ``< num_slots``, still valid), ``local_pre``/``local_post`` are
+    extended with the identity on the canary row, and the result region
+    (``out_slots``/``out_offsets``) is pinned to the original
+    schedule's, so stripping the canary row recovers the original
+    output exactly.  The canary row index is the ORIGINAL
+    ``num_slots``; the transports' scratch row moves up by one.
+    """
+    def extend(perm):
+        if perm is None:
+            return None
+        col = np.full((schedule.nranks, 1), schedule.num_slots,
+                      dtype=perm.dtype)
+        return np.concatenate([perm, col], axis=1)
+
+    return CommSchedule(
+        nranks=schedule.nranks,
+        num_slots=schedule.num_slots + 1,
+        rounds=schedule.rounds,
+        name=schedule.name + "+canary",
+        slot_bytes=None if schedule.slot_bytes is None
+        else np.concatenate([schedule.slot_bytes, [0]]),
+        local_pre=extend(schedule.local_pre),
+        local_post=extend(schedule.local_post),
+        out_slots=schedule.result_slots,
+        out_offsets=schedule.out_offsets,
+        compute_events=schedule.compute_events)
+
+
 def make_round(nranks: int,
                edges: Sequence[tuple[int, int]],
                send_blocks: dict[int, Sequence[int]],

@@ -51,6 +51,23 @@ from repro.core.topology import Topology
 from repro import compat
 
 
+class TransportError(RuntimeError):
+    """A substrate failed to execute a round/schedule (a failed kernel
+    launch, a dropped ppermute, an injected chaos fault).  Typed so the
+    recovery ladder (``core.resilient``) can distinguish a *transport*
+    failure — retryable, degradable to another substrate — from a
+    programming error, which must stay loud.
+
+    ``transport`` names the substrate, ``round_idx`` the failing round
+    (-1 when the failure is not round-attributable)."""
+
+    def __init__(self, msg: str, *, transport: str = "?",
+                 round_idx: int = -1):
+        super().__init__(msg)
+        self.transport = transport
+        self.round_idx = round_idx
+
+
 class Transport(abc.ABC):
     """Executes schedules for a fixed rank count.
 
@@ -258,6 +275,36 @@ class ShardMapTransport(Transport):
         carry, _ = jax.lax.scan(
             body, init, (xs, jnp.arange(chunks, dtype=jnp.int32)))
         return carry
+
+    def run_global(self, schedule: CommSchedule, gbuf) -> jax.Array:
+        """Host-side execution of a *global* [nranks, num_slots, *slot]
+        buffer: builds a one-axis mesh over the first ``nranks`` local
+        devices and runs the schedule inside its own ``shard_map`` —
+        the PallasTransport.run_global calling convention on the
+        ppermute substrate.  This is the entry the recovery ladder
+        (``core.resilient``) and the tuner use when they hold concrete
+        buffers rather than traced shards; requires ``nranks`` devices
+        (``TransportError`` otherwise, so the ladder can skip the rung
+        instead of crashing)."""
+        from jax.sharding import PartitionSpec as P
+
+        n = self.nranks
+        if jax.device_count() < n:
+            raise TransportError(
+                f"shardmap run_global needs {n} devices, have "
+                f"{jax.device_count()}", transport="shardmap")
+        assert gbuf.shape[0] == n, (gbuf.shape, n)
+        assert gbuf.shape[1] == schedule.num_slots
+        mesh = compat.make_mesh((n,), ("_resil",),
+                                devices=jax.devices()[:n])
+        tr = ShardMapTransport(n, "_resil", topo=self.topo)
+        f = compat.shard_map(
+            lambda b: tr.run(schedule, b), mesh=mesh,
+            in_specs=P("_resil"), out_specs=P("_resil"), check_vma=False)
+        flat = jnp.asarray(gbuf).reshape((n * schedule.num_slots,)
+                                         + gbuf.shape[2:])
+        out = f(flat)
+        return out.reshape((n, schedule.num_slots) + gbuf.shape[2:])
 
     def _axis_arg(self):
         return self.axis_names if len(self.axis_names) > 1 else self.axis_names[0]

@@ -307,8 +307,15 @@ def _time_cell(collective: str, candidates: dict, topo: Topology,
 # ---------------------------------------------------------------------------
 
 
+class MeasurementTimeout(RuntimeError):
+    """A timed execution overran its cooperative deadline (a hung
+    round, an injected chaos stall).  Typed so probe/tuning callers can
+    keep prior measurements and record the skip instead of wedging."""
+
+
 def measure_schedule(schedule, topo: Topology, *, slot_elems: int = 1,
-                     repeats: int = 3, fill=None) -> float:
+                     repeats: int = 3, fill=None,
+                     deadline_s: float | None = None) -> float:
     """Wall clock of one ``CommSchedule`` executed by ShardMapTransport
     under jit on the live mesh (requires >= topo.nranks devices).
 
@@ -316,6 +323,14 @@ def measure_schedule(schedule, topo: Topology, *, slot_elems: int = 1,
     neighborhood plans, partitioned transfers — which is what lets one
     tuner cover every path.  ``slot_elems`` is the float32 width of one
     buffer slot; ``fill`` optionally seeds the per-rank buffers.
+
+    ``deadline_s`` bounds the WHOLE measurement (compile + warm +
+    repeats) cooperatively: overrun raises ``MeasurementTimeout`` at
+    the next completion point instead of returning a poisoned sample —
+    a hung probe surfaces as a typed skip, not a wedged daemon.  (A
+    stall that never returns needs the thread-level timeout in
+    ``linkprobe.probe_links``; this check catches the common case where
+    the call eventually finishes, far too late to trust.)
     """
     from jax.sharding import PartitionSpec as P
     from repro.core.transport import ShardMapTransport
@@ -323,6 +338,19 @@ def measure_schedule(schedule, topo: Topology, *, slot_elems: int = 1,
     n = topo.nranks
     if jax.device_count() < n:
         raise RuntimeError(f"need {n} devices, have {jax.device_count()}")
+    if deadline_s is not None and deadline_s <= 0:
+        raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+    start = time.perf_counter()
+
+    def check(stage: str) -> None:
+        if deadline_s is None:
+            return
+        dt = time.perf_counter() - start
+        if dt > deadline_s:
+            raise MeasurementTimeout(
+                f"measure_schedule({schedule.name}): {stage} at "
+                f"{dt:.3f}s exceeded deadline {deadline_s:.3f}s")
+
     mesh = compat.make_mesh((n,), (_AXIS,), devices=jax.devices()[:n])
     transport = ShardMapTransport(n, _AXIS, topo=topo)
     f = jax.jit(compat.shard_map(
@@ -331,11 +359,13 @@ def measure_schedule(schedule, topo: Topology, *, slot_elems: int = 1,
     x = (np.ones((n * schedule.num_slots, slot_elems), np.float32)
          if fill is None else fill)
     jax.block_until_ready(f(x))            # compile + warm the caches
+    check("warmup")
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
         jax.block_until_ready(f(x))
         best = min(best, time.perf_counter() - t0)
+        check("repeat")
     return best
 
 
@@ -353,6 +383,31 @@ def schedule_time(schedule, topo: Topology, *, slot_nbytes: int,
     return executor.get_executor(
         schedule, topo=topo).compiled_schedule.modeled_time(
             topo, slot_nbytes)
+
+
+def verify_overhead_s(schedule, topo: Topology, *, slot_nbytes: int,
+                      verify: str = "canary") -> float:
+    """Modeled cost of ``core.resilient``'s per-run integrity check, so
+    resilience is priced like any other knob the tuner owns.
+
+    "canary" is verification WITHOUT a second execution: one host pass
+    over the result region plus the canary row — ``(result_slots + 1) *
+    slot_nbytes`` bytes at HBM bandwidth.  "full" adds one trusted
+    reference execution of the schedule (alpha-beta modeled) plus a
+    second result-region pass for the bitwise compare.  "off" is free.
+    The bench's chaos section gates the modeled canary overhead staying
+    a tiny fraction of the schedule's own modeled time.
+    """
+    from repro.core.topology import HBM_BW
+    if verify == "off":
+        return 0.0
+    scan = (schedule.result_slots + 1) * max(1, int(slot_nbytes)) / HBM_BW
+    if verify == "canary":
+        return scan
+    if verify == "full":
+        return (schedule.modeled_time(topo, slot_nbytes) + 2 * scan)
+    raise ValueError(f"unknown verify mode {verify!r}; "
+                     f"expected off/canary/full")
 
 
 def tune(topo: Topology, *, collectives=COLLECTIVES, sizes=DEFAULT_SIZES,

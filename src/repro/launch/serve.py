@@ -59,6 +59,11 @@ def main(argv=None):
                          "round (shardmap), the whole schedule as a "
                          "single device kernel (pallas), or the tuner's "
                          "per-size choice (auto)")
+    ap.add_argument("--resilience", default="off",
+                    choices=["off", "canary", "full"],
+                    help="chaos-resilient EP dispatch collectives: arm "
+                         "the recovery ladder; canary/full set the "
+                         "host-level verification mode")
     args = ap.parse_args(argv)
 
     mpix_api.set_default_policy(args.select_policy)
@@ -101,7 +106,9 @@ def main(argv=None):
             ep_options = EPOptions(alltoall=args.ep_alltoall,
                                    transport=args.ep_transport,
                                    policy=args.select_policy)
-        opts = ServeOptions(ep_options=ep_options)
+        opts = ServeOptions(ep_options=ep_options,
+                            resilience=(None if args.resilience == "off"
+                                        else args.resilience))
         decode = jax.jit(make_decode_step(cfg, mesh, opts))
 
         # prefill token-by-token through the decode step (keeps one

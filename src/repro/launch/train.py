@@ -41,6 +41,8 @@ def build(args):
         grad_buckets=args.grad_buckets, moe_mode=args.moe_mode,
         ep_alltoall=args.ep_alltoall, ep_policy=args.select_policy,
         ep_transport=args.ep_transport, dp_transport=args.dp_transport,
+        resilience=(None if args.resilience == "off"
+                    else args.resilience),
         remat=not args.smoke,
         peak_lr=args.lr, warmup_steps=max(1, args.steps // 20),
         total_steps=args.steps)
@@ -220,6 +222,13 @@ def main(argv=None):
                     choices=["shardmap", "pallas", "auto"],
                     help="substrate for explicit-mode gradient sync "
                          "(same choices as --ep-transport)")
+    ap.add_argument("--resilience", default="off",
+                    choices=["off", "canary", "full"],
+                    help="chaos-resilient collectives: arm the recovery "
+                         "ladder (retry + transport fallback + "
+                         "algorithm refit + xla) for EP dispatch and "
+                         "explicit-mode grad sync; canary/full set the "
+                         "host-level verification mode")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)

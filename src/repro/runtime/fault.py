@@ -26,11 +26,13 @@ observes exactly the injected degradation and nothing else.
 from __future__ import annotations
 
 import dataclasses
+import math
 import signal
+import warnings
 from typing import Callable
 
-from repro.checkpoint import AsyncCheckpointer, latest_step, \
-    restore_checkpoint
+from repro.checkpoint import AsyncCheckpointer, CheckpointCorruptError, \
+    committed_steps, restore_checkpoint
 from repro.core.topology import LinkModel
 
 
@@ -94,15 +96,26 @@ class LinkFault:
     matters: a congested DCN shows up as a beta (bandwidth) collapse
     with latency intact, which is exactly the drift shape that must
     heal *only* the beta-dominated table cells.
+
+    ``apply``/``clear`` are the shared link-injector protocol: any
+    object with this pair plugs into ``linkprobe.model_timer`` —
+    ``core.chaos.FaultPlan`` implements the same pair so a chaos
+    campaign's hang events degrade the modeled fabric a probe pass
+    observes, through the exact same hook.
     """
 
     scales: dict = dataclasses.field(default_factory=dict)
 
     def degrade(self, level: int, *, alpha_scale: float = 1.0,
                 beta_scale: float = 1.0) -> None:
-        if alpha_scale < 0 or beta_scale < 0:
-            raise ValueError(
-                f"scales must be >= 0, got {alpha_scale}/{beta_scale}")
+        # mirror LinkModel.__post_init__: finite and non-negative, so a
+        # NaN/inf scale is rejected here instead of poisoning every
+        # modeled probe time downstream
+        for name, s in (("alpha_scale", alpha_scale),
+                        ("beta_scale", beta_scale)):
+            if not math.isfinite(s) or s < 0:
+                raise ValueError(
+                    f"{name} must be finite and >= 0, got {s}")
         self.scales[int(level)] = (float(alpha_scale), float(beta_scale))
 
     def clear(self, level: int | None = None) -> None:
@@ -137,21 +150,49 @@ class FaultTolerantLoop:
                  preemption: PreemptionSignal | None = None,
                  num_shards: int = 1,
                  rank_loss=None,
-                 on_rank_loss: Callable | None = None):
+                 on_rank_loss: Callable | None = None,
+                 on_degraded: Callable | None = None):
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.preemption = preemption or PreemptionSignal()
         self.ckpt = AsyncCheckpointer(ckpt_dir, num_shards=num_shards)
         self.rank_loss = rank_loss
         self.on_rank_loss = on_rank_loss
+        self.on_degraded = on_degraded
+        # DegradationReports drained from api.take_degradations() per
+        # step — the loop-level record of every recovered fault
+        self.degradations: list = []
 
     def resume_or_init(self, init_state):
-        step = latest_step(self.ckpt_dir)
-        if step is None:
-            return init_state, 0
-        tree, meta = restore_checkpoint(self.ckpt_dir, init_state,
-                                        step=step)
-        return tree, meta.get("next_step", step + 1)
+        """Resume from the newest *intact* checkpoint.
+
+        A corrupt committed step (truncated shard, flipped bytes —
+        ``CheckpointCorruptError``) is skipped with a warning and the
+        walk continues to the next-newest committed step; only when
+        every committed checkpoint is corrupt (or none exists) does the
+        loop fall back to ``(init_state, 0)``."""
+        for step in committed_steps(self.ckpt_dir):
+            try:
+                tree, meta = restore_checkpoint(self.ckpt_dir, init_state,
+                                                step=step)
+            except CheckpointCorruptError as e:
+                warnings.warn(
+                    f"skipping corrupt checkpoint step {step}: {e}",
+                    RuntimeWarning, stacklevel=2)
+                continue
+            return tree, meta.get("next_step", step + 1)
+        return init_state, 0
+
+    def _drain_degradations(self, step: int) -> None:
+        from repro.core import api
+
+        reports = api.take_degradations()
+        if not reports:
+            return
+        self.degradations.extend(reports)
+        if self.on_degraded is not None:
+            for rep in reports:
+                self.on_degraded(step, rep)
 
     def run(self, state, step_fn: Callable, *, start_step: int,
             num_steps: int, on_step=None):
@@ -164,6 +205,7 @@ class FaultTolerantLoop:
         while step < end:
             state = step_fn(state, step)
             step += 1
+            self._drain_degradations(step)
             if on_step is not None:
                 on_step(step, state)
             if step % self.ckpt_every == 0:

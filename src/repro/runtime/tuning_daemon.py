@@ -54,6 +54,8 @@ class DriftReport:
     old_fingerprint: str
     new_fingerprint: str
     stragglers: tuple = ()        # flagged hosts, when a monitor is wired
+    probe_skipped: tuple = ()     # (level, reason) levels kept on prior
+                                  # links (probe deadline hit, bad fit)
 
     @property
     def healed(self) -> bool:
@@ -82,7 +84,8 @@ class TuningDaemon:
                  probe_every: int = 1, drift_tol: float = 1.25,
                  cell_tol: float = 1.10, sizes=linkprobe.DEFAULT_PROBE_SIZES,
                  repeats: int = 3, timer=None, force_model: bool = False,
-                 include_xla: bool = True, monitor=None, table=None):
+                 include_xla: bool = True, monitor=None, table=None,
+                 probe_deadline_s: float | None = None):
         from repro.core import tuner
 
         if probe_every < 1:
@@ -97,13 +100,18 @@ class TuningDaemon:
         self.include_xla = bool(include_xla)
         self.monitor = monitor
         self._timer = timer
+        # per-level probe wall-clock bound: a hung wire becomes a
+        # recorded skip (level keeps its prior link) instead of a
+        # wedged daemon thread — see linkprobe.probe_links(deadline_s=)
+        self.probe_deadline_s = probe_deadline_s
         self._lock = threading.Lock()
         self._thread = None
         self._stop = threading.Event()
         self.reports: list[DriftReport] = []
         # baseline probe: measured geometry from step 0
         probe = linkprobe.probe_links(topo, sizes=self.sizes,
-                                      repeats=self.repeats, timer=timer)
+                                      repeats=self.repeats, timer=timer,
+                                      deadline_s=probe_deadline_s)
         self.topo = linkprobe.measured_topology(topo, probe)
         if table is None:
             table = tuner.ensure_table(
@@ -133,7 +141,8 @@ class TuningDaemon:
                 stragglers = tuple(self.monitor.stragglers())
             probe = linkprobe.probe_links(
                 self.topo, sizes=self.sizes, repeats=self.repeats,
-                timer=self._timer)
+                timer=self._timer, deadline_s=self.probe_deadline_s)
+            probe_skipped = tuple(sorted(probe.skipped.items()))
             new_topo = linkprobe.measured_topology(self.topo, probe)
             drifted = tuple(linkprobe.drifted_levels(
                 self.topo, new_topo, tol=self.drift_tol))
@@ -146,7 +155,7 @@ class TuningDaemon:
                     generation=self.table.generation,
                     old_fingerprint=self.topo.fingerprint(),
                     new_fingerprint=self.topo.fingerprint(),
-                    stragglers=stragglers)
+                    stragglers=stragglers, probe_skipped=probe_skipped)
                 self.reports.append(report)
                 return report
             old_topo = self.topo
@@ -173,7 +182,7 @@ class TuningDaemon:
                 generation=self.table.generation,
                 old_fingerprint=old_fp,
                 new_fingerprint=new_topo.fingerprint(),
-                stragglers=stragglers)
+                stragglers=stragglers, probe_skipped=probe_skipped)
             self.reports.append(report)
             return report
 

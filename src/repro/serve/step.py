@@ -35,6 +35,10 @@ class ServeOptions:
     # (None = XLA-sharded default).  With overlap_chunks set, the
     # dispatch alltoall pipelines against the expert MLPs — the serve
     # hot path gets the same compute-comm overlap as training.
+    resilience: object = None
+    # chaos-resilient dispatch collectives: overrides ep_options'
+    # resilience when both are set (the serve knob wins so launchers
+    # can arm verification without rebuilding EPOptions).
 
 
 def init_serve_cache(cfg, batch: int, max_len: int):
@@ -47,8 +51,11 @@ def make_prefill_step(cfg, mesh, opts: ServeOptions) -> Callable:
 
     moe_dispatch = None
     if opts.ep_options is not None and cfg.moe is not None:
-        moe_dispatch = make_moe_dispatch(mesh, opts.ep_options,
-                                         cfg.mlp_act)
+        ep_opts = opts.ep_options
+        if opts.resilience is not None:
+            ep_opts = dataclasses.replace(ep_opts,
+                                          resilience=opts.resilience)
+        moe_dispatch = make_moe_dispatch(mesh, ep_opts, cfg.mlp_act)
 
     def prefill(params, batch):
         kw = {}

@@ -55,6 +55,11 @@ class EPOptions:
     # ppermute per compiled round), "pallas" (the whole schedule as one
     # device-side kernel — core.pallas_lowering), or "auto" (tuner's
     # per-size-bucket choice).  Ignored by "xla" algorithms.
+    resilience: object = None
+    # chaos-resilient execution for the dispatch collectives: None/False
+    # = off, True/"canary"/"full"/dict/ResilienceOptions arm the api
+    # recovery ladder (retry + transport fallback + algorithm refit +
+    # xla) — see core.resilient.resolve_resilience.
 
 
 def ep_axes_for(cfg_moe: MoEConfig, mesh) -> tuple[str, ...]:
@@ -161,7 +166,7 @@ def _dispatch_overlapped(send, w_gate, w_up, w_down, *, chunks: int,
     return mpix.mpix_alltoall_overlap(
         x_cm, ep, consume, acc, chunks=chunks,
         algorithm=opts.alltoall, policy=opts.policy,
-        transport=opts.transport)
+        transport=opts.transport, resilience=opts.resilience)
 
 
 def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
@@ -208,7 +213,8 @@ def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
     else:
         recv = mpix.mpix_alltoall(send, ep, algorithm=opts.alltoall,
                                   policy=opts.policy,
-                                  transport=opts.transport)
+                                  transport=opts.transport,
+                                  resilience=opts.resilience)
         tok = recv.reshape(N_ep, E_loc, C, d).transpose(1, 0, 2, 3) \
                   .reshape(E_loc, N_ep * C, d)
 
@@ -220,7 +226,8 @@ def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
     back = ye4.transpose(1, 0, 2, 3).reshape(N_ep * E_loc * C, d)
     ret = mpix.mpix_alltoall(back, ep, algorithm=opts.alltoall,
                              policy=opts.policy,
-                             transport=opts.transport)
+                             transport=opts.transport,
+                             resilience=opts.resilience)
 
     gathered = jnp.concatenate([ret, jnp.zeros((1, d), x.dtype)])[dest]
     out_slice = jnp.einsum("tkd,tk->td", gathered.reshape(T, K, d), w)
@@ -229,5 +236,6 @@ def _dispatch_body(rp, w_gate, w_up, w_down, x, *, cfg: MoEConfig,
     out = mpix.mpix_allgather(out_slice, "model",
                               algorithm=opts.allgather,
                               policy=opts.policy,
-                              transport=opts.transport)
+                              transport=opts.transport,
+                              resilience=opts.resilience)
     return out.reshape(B, S, d)

@@ -56,6 +56,11 @@ class TrainOptions:
                                        # grad sync as reduce-scatter /
                                        # clip-on-shards / allgather in
                                        # this many chunks (0 = off)
+    resilience: object = None          # chaos-resilient collectives:
+                                       # None/False off; True/"canary"/
+                                       # "full"/dict arms the api
+                                       # recovery ladder for EP dispatch
+                                       # and explicit-mode grad sync
     remat: bool = True
     use_kernel: bool = False           # Pallas attention/wkv path
     peak_lr: float = 3e-4
@@ -111,7 +116,8 @@ def make_train_step(cfg, mesh, opts: TrainOptions) -> Callable:
                             capacity_factor=opts.ep_capacity,
                             policy=opts.ep_policy,
                             overlap_chunks=opts.ep_overlap_chunks,
-                            transport=opts.ep_transport),
+                            transport=opts.ep_transport,
+                            resilience=opts.resilience),
             cfg.mlp_act)
     elif opts.moe_mode == "dropless" and cfg.moe is not None:
         moe_dispatch = lambda p, c, x: moe_mod.forward_dropless(
@@ -165,18 +171,20 @@ def make_train_step(cfg, mesh, opts: TrainOptions) -> Callable:
             if opts.compress_dcn and "pod" in mesh.axis_names:
                 grads, residual = sync.dp_allreduce_compressed(
                     grads, residual, intra_algorithm=opts.dp_algorithm,
-                    denom=denom)
+                    denom=denom, resilience=opts.resilience)
             elif overlap:
                 grads, gnorm = sync.dp_allreduce_overlap(
                     grads, d_axes, algorithm=opts.dp_algorithm,
                     chunks=opts.overlap_grad_chunks, denom=denom,
                     max_norm=opts.max_grad_norm,
-                    transport=opts.dp_transport)
+                    transport=opts.dp_transport,
+                    resilience=opts.resilience)
             else:
                 grads = sync.dp_allreduce(
                     grads, d_axes, algorithm=opts.dp_algorithm,
                     buckets=opts.grad_buckets, denom=denom,
-                    transport=opts.dp_transport)
+                    transport=opts.dp_transport,
+                    resilience=opts.resilience)
             lval = jax.lax.psum(lsum, d_axes) / denom
             return lval, grads, residual, gnorm
 

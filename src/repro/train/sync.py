@@ -45,12 +45,13 @@ def _unflatten(flat, meta):
 
 
 def dp_allreduce(grads, axis_names, *, algorithm="xla", buckets=1,
-                 denom=None, transport="shardmap"):
+                 denom=None, transport="shardmap", resilience=None):
     """Sum-allreduce a gradient pytree over ``axis_names`` (call inside
     shard_map), divided by ``denom`` (scalar; e.g. the psum'd live-token
     count so per-shard sum-losses combine into an exact global mean).
     ``transport`` selects the substrate for schedule-backed algorithms
-    ("shardmap" | "pallas" | "auto"; ignored by "xla")."""
+    ("shardmap" | "pallas" | "auto"; ignored by "xla").  ``resilience``
+    arms the api recovery ladder for each bucket's collective."""
     names = (axis_names,) if isinstance(axis_names, str) \
         else tuple(axis_names)
     if denom is None:
@@ -64,7 +65,8 @@ def dp_allreduce(grads, axis_names, *, algorithm="xla", buckets=1,
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
     parts = flat.reshape(max(1, buckets), per)
     done = [mpix.mpix_allreduce(parts[i], names, algorithm=algorithm,
-                                transport=transport)
+                                transport=transport,
+                                resilience=resilience)
             for i in range(parts.shape[0])]
     flat = jnp.concatenate(done)[: sum(meta[3])] / denom
     return _unflatten(flat, meta)
@@ -81,7 +83,7 @@ _RS_AG = {
 
 def dp_allreduce_overlap(grads, axis_names, *, algorithm="xla",
                          chunks=2, denom=None, max_norm=None,
-                         transport="shardmap"):
+                         transport="shardmap", resilience=None):
     """Pipelined DP sync fused with gradient clipping: reduce-scatter
     chunks, per-shard norm/clip compute between the halves, allgather
     chunks — the optimizer-side compute runs on 1/N of the data while
@@ -121,7 +123,8 @@ def dp_allreduce_overlap(grads, axis_names, *, algorithm="xla",
     for i in range(chunks):
         sh = mpix.mpix_reduce_scatter(parts[i], names,
                                       algorithm=rs_alg,
-                                      transport=transport) / denom
+                                      transport=transport,
+                                      resilience=resilience) / denom
         gsq = gsq + jnp.sum(jnp.square(sh))
         shards.append(sh)
     gnorm = jnp.sqrt(jax.lax.psum(gsq, names))
@@ -129,14 +132,15 @@ def dp_allreduce_overlap(grads, axis_names, *, algorithm="xla",
         scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
         shards = [sh * scale for sh in shards]
     outs = [mpix.mpix_allgather(sh, names, algorithm=ag_alg,
-                                transport=transport)
+                                transport=transport,
+                                resilience=resilience)
             for sh in shards]
     flat = jnp.concatenate(outs)[: total]
     return _unflatten(flat, meta), gnorm
 
 
 def dp_allreduce_compressed(grads, residual, *, intra_algorithm="xla",
-                            denom=None):
+                            denom=None, resilience=None):
     """Hierarchical DP sync with int8 + error feedback on the DCN hop.
 
     Call inside shard_map over ("pod", "data").  Steps:
@@ -151,7 +155,8 @@ def dp_allreduce_compressed(grads, residual, *, intra_algorithm="xla",
     if denom is None:
         denom = Q * compat.axis_size("data")
     flat, meta = _flatten(grads)
-    flat = mpix.mpix_allreduce(flat, "data", algorithm=intra_algorithm)
+    flat = mpix.mpix_allreduce(flat, "data", algorithm=intra_algorithm,
+                               resilience=resilience)
     if residual is None:
         res_flat = jnp.zeros_like(flat)
     else:

@@ -41,8 +41,17 @@ GOOD_FLEET = {
     "elastic": {"rederived": 2, "bit_exact": True, "invalidated": 2,
                 "generation": 1},
 }
+GOOD_CHAOS = {
+    "campaigns": {c: {"recovered_bitwise": True, "max_attempts": 3,
+                      "retries": 2, "walltime_s": 0.01}
+                  for c in ("corrupt", "fail", "hang", "mixed")},
+    "unrecoverable": {"typed": True, "attempts": 4, "bounded": True},
+    "verify_pricing": {"off_s": 0.0, "canary_frac": 0.07,
+                       "full_frac": 1.15},
+}
 GOOD_DATA = {"sim_exec": {"speedup": 8.0, "compiled_total_s": 0.1},
-             "pallas": GOOD_PALLAS, "fleet": GOOD_FLEET}
+             "pallas": GOOD_PALLAS, "fleet": GOOD_FLEET,
+             "chaos": GOOD_CHAOS}
 
 
 def test_check_missing_baseline_exits_nonzero(tmp_path):
@@ -188,6 +197,58 @@ def test_committed_baseline_has_fleet_claims():
     assert heal["invalidated"]["executors"] >= 1
     assert fleet["elastic"]["rederived"] >= 1
     assert fleet["elastic"]["bit_exact"] is True
+
+
+def test_check_lost_chaos_claims_exits_nonzero(tmp_path):
+    """The chaos section is deterministic (seeded campaigns on the sim
+    substrate): a non-bitwise recovery, a missing campaign, an untyped
+    or unbounded unrecoverable walk, a broken verify-pricing ordering,
+    or a missing section all block."""
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"sim_exec": {"speedup": 8.0}}))
+    import copy
+
+    drift = copy.deepcopy(GOOD_DATA)
+    drift["chaos"]["campaigns"]["corrupt"]["recovered_bitwise"] = False
+    with pytest.raises(SystemExit, match="bitwise"):
+        bench_transport.check_against(str(base), drift)
+    partial = copy.deepcopy(GOOD_DATA)
+    del partial["chaos"]["campaigns"]["hang"]
+    with pytest.raises(SystemExit, match="campaigns"):
+        bench_transport.check_against(str(base), partial)
+    untyped = copy.deepcopy(GOOD_DATA)
+    untyped["chaos"]["unrecoverable"]["typed"] = False
+    with pytest.raises(SystemExit, match="typed"):
+        bench_transport.check_against(str(base), untyped)
+    spin = copy.deepcopy(GOOD_DATA)
+    spin["chaos"]["unrecoverable"]["bounded"] = False
+    with pytest.raises(SystemExit, match="bounded"):
+        bench_transport.check_against(str(base), spin)
+    free = copy.deepcopy(GOOD_DATA)
+    free["chaos"]["verify_pricing"]["canary_frac"] = 0.0
+    with pytest.raises(SystemExit, match="pricing"):
+        bench_transport.check_against(str(base), free)
+    gone = {k: v for k, v in GOOD_DATA.items() if k != "chaos"}
+    with pytest.raises(SystemExit, match="chaos"):
+        bench_transport.check_against(str(base), gone)
+
+
+def test_committed_baseline_has_chaos_claims():
+    """The committed artifact must record the chaos acceptance numbers:
+    all four campaigns recovered bitwise, a typed+bounded unrecoverable
+    walk, and the verify-pricing ordering off = 0 < canary < full."""
+    committed = Path(__file__).resolve().parents[1] / "BENCH_transport.json"
+    with open(committed) as fh:
+        data = json.load(fh)
+    ch = data["chaos"]
+    assert set(ch["campaigns"]) == {"corrupt", "fail", "hang", "mixed"}
+    assert all(row["recovered_bitwise"] is True
+               for row in ch["campaigns"].values())
+    assert ch["unrecoverable"]["typed"] is True
+    assert ch["unrecoverable"]["bounded"] is True
+    pr = ch["verify_pricing"]
+    assert pr["off_s"] == 0.0
+    assert 0.0 < pr["canary_frac"] < pr["full_frac"]
 
 
 def test_committed_baseline_has_makespan_wins():

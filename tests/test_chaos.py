@@ -1,0 +1,419 @@
+"""Chaos-resilient collectives: deterministic fault injection + the
+recovery ladder (core.chaos attack half, core.resilient defense half).
+
+The acceptance oracle is metamorphic: under every seeded fault campaign
+a collective's recovered result region is **bitwise identical** to the
+fault-free run, or a typed error (``TransportError`` without
+resilience, ``UnrecoverableError`` when the ladder is exhausted) is
+raised — never a silent mismatch.
+
+Host-level suites here drive ``ResilientExec`` on concrete global
+buffers (sim + reference rungs in-process; the multi-device
+shardmap/pallas/api-ladder paths run from
+``device_scripts/check_chaos_api.py`` in a subprocess).
+"""
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import chaos
+from repro.core import linkprobe
+from repro.core.algorithms import REGISTRY
+from repro.core.chaos import ChaosTransport, FaultPlan
+from repro.core.resilient import (ResilienceOptions, ResilientExec,
+                                  UnrecoverableError, canary_pattern,
+                                  resolve_resilience, run_resilient)
+from repro.core.topology import Topology, flat_topology
+from repro.core.transport import SimTransport, TransportError
+
+SCRIPTS = Path(__file__).parent / "device_scripts"
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+TOPO = flat_topology(4)
+
+# one representative schedule-backed algorithm per collective
+CASES = [("allgather", "ring"), ("allreduce", "ring_rs_ag"),
+         ("reduce_scatter", "ring"), ("alltoall", "pairwise")]
+
+
+def _sched(coll, alg, topo=TOPO):
+    return REGISTRY[coll][alg](topo)
+
+
+def _gbuf(sched, seed=0, width=3):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-8, 8, (sched.nranks, sched.num_slots, width)
+                        ).astype(np.float32)
+
+
+def _result_region(sched, out):
+    out = np.asarray(out)
+    rows = sched.result_slots
+    return np.stack([out[r, sched.out_offset(r):
+                         sched.out_offset(r) + rows]
+                     for r in range(sched.nranks)])
+
+
+def _oracle(sched, buf):
+    return _result_region(
+        sched, SimTransport(sched.nranks).run_reference(sched, buf))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: determinism, validation, firing state
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(0, "melt")
+    with pytest.raises(ValueError):
+        FaultPlan(0, "corrupt", mode="gamma-ray")
+    with pytest.raises(ValueError):
+        FaultPlan(0, "corrupt", times=-1)
+    with pytest.raises(ValueError):
+        FaultPlan(0, "corrupt", max_faults=0)
+    with pytest.raises(ValueError):
+        FaultPlan(0, "hang", delay_s=float("nan"))
+
+
+def test_fault_plan_deterministic_placement():
+    sched = _sched("allgather", "ring")
+    for campaign in chaos.CAMPAIGNS:
+        a = FaultPlan(7, campaign, max_faults=3).events_for(sched)
+        b = FaultPlan(7, campaign, max_faults=3).events_for(sched)
+        assert a == b
+        for ev in a:
+            assert 0 <= ev.round_idx < sched.num_rounds
+            assert 0 <= ev.rank < sched.nranks
+            assert 0 <= ev.slot < sched.num_slots
+    # the placement key includes the seed and the schedule identity
+    assert (FaultPlan(7, "corrupt").events_for(sched)
+            != FaultPlan(8, "corrupt").events_for(sched))
+    other = _sched("alltoall", "pairwise")
+    assert (FaultPlan(7, "corrupt").events_for(sched)
+            != FaultPlan(7, "corrupt").events_for(other))
+
+
+def test_fault_plan_transient_counter_and_reset():
+    sched = _sched("allgather", "ring")
+    plan = FaultPlan(3, "fail", times=2)
+    assert plan.take(sched) and plan.take(sched)
+    assert plan.take(sched) == ()          # exhausted after ``times``
+    plan.reset()
+    assert plan.take(sched)                # replays after reset
+    scoped = FaultPlan(3, "fail", match="no-such-schedule")
+    assert scoped.take(sched) == ()        # match filter gates firing
+
+
+def test_chaos_transport_fail_is_typed_and_attributed():
+    sched = _sched("allgather", "ring")
+    tr = chaos.wrap(SimTransport(4), FaultPlan(1, "fail"))
+    assert isinstance(tr, ChaosTransport)
+    with pytest.raises(TransportError) as ei:
+        tr.run(sched, _gbuf(sched))
+    assert ei.value.transport == "SimTransport"
+    assert ei.value.round_idx == FaultPlan(1, "fail").events_for(
+        sched)[0].round_idx
+    # transient: the second execution is clean and bit-exact
+    out = tr.run(sched, _gbuf(sched))
+    assert np.array_equal(_result_region(sched, out),
+                          _oracle(sched, _gbuf(sched)))
+
+
+def test_chaos_wrap_none_is_passthrough():
+    tr = SimTransport(4)
+    assert chaos.wrap(tr, None) is tr
+
+
+# ---------------------------------------------------------------------------
+# ResilienceOptions / resolve_resilience
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_resilience_forms():
+    assert resolve_resilience(None) is None
+    assert resolve_resilience(False) is None
+    assert resolve_resilience(True) == ResilienceOptions()
+    assert resolve_resilience("full").verify == "full"
+    assert resolve_resilience({"max_retries": 5}).max_retries == 5
+    opts = ResilienceOptions(verify="off")
+    assert resolve_resilience(opts) is opts
+    with pytest.raises(ValueError):
+        resolve_resilience("sideways")
+    with pytest.raises(ValueError):
+        resolve_resilience(3.14)
+
+
+def test_resilience_options_validation():
+    with pytest.raises(ValueError):
+        ResilienceOptions(verify="sometimes")
+    with pytest.raises(ValueError):
+        ResilienceOptions(max_retries=-1)
+    with pytest.raises(ValueError):
+        ResilienceOptions(backoff_s=float("inf"))
+    with pytest.raises(ValueError):
+        ResilienceOptions(backoff_mult=0.5)
+    with pytest.raises(ValueError):
+        ResilienceOptions(deadline_s=0.0)
+    with pytest.raises(ValueError):
+        ResilienceOptions(ladder=())
+    with pytest.raises(ValueError):
+        ResilienceOptions(ladder=("warp",))
+
+
+def test_canary_pattern_deterministic_and_nonzero():
+    sched = _sched("allgather", "ring")
+    a = canary_pattern(sched, np.float32, (3,))
+    b = canary_pattern(sched, np.float32, (3,))
+    assert a.shape == (4, 1, 3) and a.dtype == np.float32
+    assert np.array_equal(a, b) and (a != 0).all()
+
+
+# ---------------------------------------------------------------------------
+# the metamorphic core: every campaign, every collective — recovered
+# output bitwise identical to the fault-free run, or typed error
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("campaign", ["corrupt", "fail", "hang", "mixed"])
+@pytest.mark.parametrize("coll,alg", CASES)
+def test_campaign_recovers_bitwise(coll, alg, campaign):
+    sched = _sched(coll, alg)
+    want = _oracle(sched, _gbuf(sched))
+    for seed in range(3):
+        plan = FaultPlan(seed, campaign, delay_s=0.005)
+        ex = ResilientExec(
+            sched, TOPO,
+            options=ResilienceOptions(verify="full",
+                                      ladder=("sim", "reference"),
+                                      backoff_s=1e-4),
+            transports={"sim": chaos.wrap(SimTransport(4), plan)})
+        out, report = ex.run(_gbuf(sched))
+        assert _result_region(sched, out).tobytes() == want.tobytes(), (
+            coll, alg, campaign, seed, report.summary())
+
+
+def test_persistent_fault_walks_to_clean_reference_rung():
+    sched = _sched("allgather", "ring")
+    plan = FaultPlan(0, "fail", times=None)       # never clears
+    ex = ResilientExec(
+        sched, TOPO,
+        options=ResilienceOptions(verify="canary", max_retries=1,
+                                  ladder=("sim", "reference"),
+                                  backoff_s=1e-4),
+        transports={"sim": chaos.wrap(SimTransport(4), plan)})
+    out, report = ex.run(_gbuf(sched))
+    assert report.recovered_with == "reference"
+    assert report.degraded and report.retries >= 2
+    assert _result_region(sched, out).tobytes() == \
+        _oracle(sched, _gbuf(sched)).tobytes()
+
+
+def test_everything_faulted_raises_unrecoverable():
+    sched = _sched("allgather", "ring")
+    plan = FaultPlan(0, "fail", times=None)
+    wrapped = chaos.wrap(SimTransport(4), plan)
+    ex = ResilientExec(
+        sched, None,                               # no topo -> no refit
+        options=ResilienceOptions(verify="off", max_retries=1,
+                                  ladder=("sim", "reference"),
+                                  backoff_s=1e-4),
+        transports={"sim": wrapped, "reference": wrapped})
+    with pytest.raises(UnrecoverableError) as ei:
+        ex.run(_gbuf(sched))
+    rep = ei.value.report
+    assert rep.recovered_with is None
+    assert all(a.outcome == "fault" for a in rep.attempts)
+    assert len(rep.attempts) == 4          # 2 rungs x (1 + 1 retry)
+
+
+def test_refit_walks_algorithm_ladder_bitwise():
+    """A fault plan pinned (by name prefix) to the primary algorithm's
+    schedules forces the refit rung; the refitted algorithm's output is
+    bitwise identical to the primary's fault-free run (allgathers agree
+    on the result region by definition)."""
+    sched = _sched("allgather", "ring")
+    plan = FaultPlan(0, "fail", times=None, match=sched.name)
+    wrapped = chaos.wrap(SimTransport(4), plan)
+    ex = ResilientExec(
+        sched, TOPO,
+        options=ResilienceOptions(verify="full", max_retries=0,
+                                  ladder=("sim",), backoff_s=1e-4),
+        transports={"sim": wrapped},
+        collective="allgather", algorithm="ring")
+    out, report = ex.run(_gbuf(sched))
+    assert report.refit_algorithm is not None
+    refit_sched = _sched("allgather", report.refit_algorithm)
+    assert _result_region(refit_sched, out).tobytes() == \
+        _oracle(sched, _gbuf(sched)).tobytes()
+
+
+def test_canary_catches_canary_row_corruption():
+    """A bitflip landing exactly on the canary row is invisible to the
+    result region but MUST be flagged (memory-spray model) — the retry
+    then recovers bitwise."""
+    from repro.core.schedule import add_canary_slot
+
+    sched = _sched("allgather", "ring")
+    xsched = add_canary_slot(sched)
+    seed = next(s for s in range(500)
+                if FaultPlan(s, "corrupt", mode="bitflip").events_for(
+                    xsched)[0].slot == sched.num_slots)
+    plan = FaultPlan(seed, "corrupt", mode="bitflip")
+    ex = ResilientExec(
+        sched, TOPO,
+        options=ResilienceOptions(verify="canary",
+                                  ladder=("sim", "reference"),
+                                  backoff_s=1e-4),
+        transports={"sim": chaos.wrap(SimTransport(4), plan)})
+    out, report = ex.run(_gbuf(sched))
+    assert ("canary", False) in report.verdicts
+    assert any(a.outcome == "corrupt" for a in report.attempts)
+    assert _result_region(sched, out).tobytes() == \
+        _oracle(sched, _gbuf(sched)).tobytes()
+
+
+def test_full_verify_catches_result_region_bitflip():
+    """verify="full": a bitflip inside the result region is caught by
+    the reference compare even though every value stays finite."""
+    from repro.core.schedule import add_canary_slot
+
+    sched = _sched("allgather", "ring")
+    xsched = add_canary_slot(sched)
+
+    def in_result(ev):
+        lo = sched.out_offset(ev.rank)
+        return lo <= ev.slot < lo + sched.result_slots
+
+    seed = next(s for s in range(500)
+                if in_result(FaultPlan(s, "corrupt",
+                                       mode="bitflip").events_for(
+                                           xsched)[0]))
+    plan = FaultPlan(seed, "corrupt", mode="bitflip")
+    ex = ResilientExec(
+        sched, TOPO,
+        options=ResilienceOptions(verify="full",
+                                  ladder=("sim", "reference"),
+                                  backoff_s=1e-4),
+        transports={"sim": chaos.wrap(SimTransport(4), plan)})
+    out, report = ex.run(_gbuf(sched))
+    assert ("reference", False) in report.verdicts
+    assert _result_region(sched, out).tobytes() == \
+        _oracle(sched, _gbuf(sched)).tobytes()
+
+
+def test_hang_with_deadline_times_out_then_recovers():
+    sched = _sched("allgather", "ring")
+    plan = FaultPlan(0, "hang", delay_s=0.2)
+    ex = ResilientExec(
+        sched, TOPO,
+        options=ResilienceOptions(verify="off", deadline_s=0.15,
+                                  ladder=("sim",), backoff_s=1e-4),
+        transports={"sim": chaos.wrap(SimTransport(4), plan)})
+    out, report = ex.run(_gbuf(sched))
+    assert any(a.outcome == "timeout" for a in report.attempts)
+    assert report.attempts[-1].outcome == "ok"
+    assert _result_region(sched, out).tobytes() == \
+        _oracle(sched, _gbuf(sched)).tobytes()
+
+
+def test_run_resilient_convenience_and_clean_path_not_degraded():
+    sched = _sched("allreduce", "ring_rs_ag")
+    out, report = run_resilient(
+        sched, _gbuf(sched), topo=TOPO,
+        resilience={"verify": "full", "ladder": ("sim", "reference")})
+    assert not report.degraded and report.retries == 0
+    assert report.recovered_with == "sim"
+    assert _result_region(sched, out).tobytes() == \
+        _oracle(sched, _gbuf(sched)).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# satellites: shared injector protocol, probe/measure deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_injector_protocol_through_model_timer():
+    """A hang campaign is visible to a link probe as inflated alpha —
+    through the exact ``apply(level, link)`` protocol LinkFault uses;
+    data-plane campaigns leave the fitted links untouched."""
+    topo = Topology(nranks=8, ranks_per_pod=4)
+    base = linkprobe.measured_topology(
+        topo, timer=linkprobe.model_timer(topo))
+    hang = FaultPlan(0, "hang", alpha_scale=200.0)
+    slow = linkprobe.measured_topology(
+        topo, timer=linkprobe.model_timer(topo, fault=hang))
+    for lv_b, lv_s in zip(base.levels, slow.levels):
+        assert lv_s.link.alpha > 50 * lv_b.link.alpha
+    quiet = FaultPlan(0, "corrupt")
+    same = linkprobe.measured_topology(
+        topo, timer=linkprobe.model_timer(topo, fault=quiet))
+    for lv_b, lv_q in zip(base.levels, same.levels):
+        assert abs(lv_q.link.alpha - lv_b.link.alpha) \
+            <= 1e-9 * lv_b.link.alpha
+    hang.clear()                                   # protocol: clear()
+    assert hang._fired == {}
+
+
+def test_probe_links_deadline_skips_hung_level():
+    topo = Topology(nranks=8, ranks_per_pod=4)
+    good = linkprobe.model_timer(topo)
+
+    def hung(level, nbytes):
+        if level == 0:
+            time.sleep(0.25)
+        return good(level, nbytes)
+
+    res = linkprobe.probe_links(topo, timer=hung, deadline_s=0.1)
+    assert 0 in res.skipped and "kept prior link" in res.skipped[0]
+    # the hung level keeps its prior link; the healthy one was fitted
+    meas = linkprobe.measured_topology(topo, res)
+    assert meas.levels[0].link == topo.levels[0].link
+    with pytest.raises(linkprobe.ProbeTimeout):
+        linkprobe.probe_links(topo, timer=hung, deadline_s=0.1,
+                              strict=True)
+
+
+def test_verify_overhead_pricing_monotonic():
+    from repro.core import tuner
+
+    sched = _sched("allgather", "ring")
+    off = tuner.verify_overhead_s(sched, TOPO, slot_nbytes=4096,
+                                  verify="off")
+    canary = tuner.verify_overhead_s(sched, TOPO, slot_nbytes=4096,
+                                     verify="canary")
+    full = tuner.verify_overhead_s(sched, TOPO, slot_nbytes=4096,
+                                   verify="full")
+    assert off == 0.0
+    assert 0.0 < canary < full
+    with pytest.raises(ValueError):
+        tuner.verify_overhead_s(sched, TOPO, slot_nbytes=4096,
+                                verify="paranoid")
+
+
+# ---------------------------------------------------------------------------
+# multi-device: the api trace-time ladder + measure_schedule deadline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_chaos_api_ladder_multi_device():
+    """Subprocess (8 host devices): injected chaos on the real mpix_*
+    shard_map paths — transient recovery, typed error without
+    resilience, persistent-fault walk to the xla rung, hang+deadline,
+    and the measure_schedule deadline."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPTS / "check_chaos_api.py")],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert proc.returncode == 0, (
+        f"--- stdout ---\n{proc.stdout[-4000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-4000:]}")
+    assert "ALL OK" in proc.stdout

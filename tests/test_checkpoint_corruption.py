@@ -1,0 +1,150 @@
+"""Checkpoint corruption: typed errors + newest-intact fallback.
+
+A committed checkpoint is not necessarily an *intact* checkpoint —
+silent disk corruption (truncated shard, flipped bytes) lands after the
+atomicity marker was written.  The contract under test:
+
+  * any damaged file in a committed step makes ``restore_checkpoint``
+    raise ``CheckpointCorruptError`` (typed — never a raw
+    ``json.JSONDecodeError`` / ``zipfile.BadZipFile`` / bare assert);
+  * ``FaultTolerantLoop.resume_or_init`` walks committed steps newest
+    first, skips corrupt ones with a warning, and resumes from the
+    newest INTACT checkpoint;
+  * when every committed checkpoint is corrupt, the loop falls back to
+    a fresh init at step 0 — a damaged checkpoint directory can delay a
+    resume but never wedge or poison it.
+"""
+import json
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruptError, committed_steps,
+                              latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.runtime.fault import FaultTolerantLoop
+
+
+def _tree(scale=1.0):
+    return {"w": (np.arange(24, dtype=np.float32).reshape(4, 6) * scale),
+            "b": np.full((4,), scale, np.float32),
+            "step": np.int32(0)}
+
+
+def _truncate(path: Path, keep_frac=0.5):
+    raw = path.read_bytes()
+    path.write_bytes(raw[: max(1, int(len(raw) * keep_frac))])
+
+
+def _bitflip(path: Path, offset=7):
+    raw = bytearray(path.read_bytes())
+    raw[offset % len(raw)] ^= 0xFF
+    path.write_bytes(bytes(raw))
+
+
+def test_truncated_shard_raises_typed_error(tmp_path):
+    save_checkpoint(tmp_path, 5, _tree())
+    _truncate(tmp_path / "step_00000005" / "shard_0.npz")
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(tmp_path, _tree(), step=5)
+
+
+def test_bitflipped_manifest_raises_typed_error(tmp_path):
+    save_checkpoint(tmp_path, 5, _tree())
+    _bitflip(tmp_path / "step_00000005" / "manifest.json")
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(tmp_path, _tree(), step=5)
+
+
+def test_garbage_shard_raises_typed_error(tmp_path):
+    save_checkpoint(tmp_path, 5, _tree())
+    (tmp_path / "step_00000005" / "shard_0.npz").write_bytes(b"not a zip")
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(tmp_path, _tree(), step=5)
+
+
+def test_missing_leaf_and_shape_mismatch_are_typed(tmp_path):
+    save_checkpoint(tmp_path, 5, _tree())
+    d = tmp_path / "step_00000005"
+    man = json.loads((d / "manifest.json").read_text())
+    # drop a leaf from the manifest: restore must not KeyError
+    man_dropped = dict(man, leaves=man["leaves"][1:])
+    (d / "manifest.json").write_text(json.dumps(man_dropped))
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(tmp_path, _tree(), step=5)
+    # corrupt a recorded shape: restore must not bare-assert
+    man_shape = json.loads(json.dumps(man))
+    man_shape["leaves"][0]["shape"] = [1, 1]
+    (d / "manifest.json").write_text(json.dumps(man_shape))
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(tmp_path, _tree(), step=5)
+
+
+def test_committed_steps_newest_first(tmp_path):
+    for s in (3, 12, 7):
+        save_checkpoint(tmp_path, s, _tree())
+    # an uncommitted partial directory is invisible
+    (tmp_path / "step_00000099").mkdir()
+    assert committed_steps(tmp_path) == [12, 7, 3]
+    assert latest_step(tmp_path) == 12
+    assert committed_steps(tmp_path / "missing") == []
+
+
+def test_resume_falls_back_to_newest_intact(tmp_path):
+    for s, scale in ((10, 1.0), (20, 2.0), (30, 3.0)):
+        save_checkpoint(tmp_path, s, _tree(scale),
+                        meta={"next_step": s})
+    _truncate(tmp_path / "step_00000030" / "shard_0.npz")
+    loop = FaultTolerantLoop(tmp_path)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        state, step = loop.resume_or_init(_tree(0.0))
+    assert step == 20
+    assert np.array_equal(state["w"], _tree(2.0)["w"])
+    assert any(issubclass(w.category, RuntimeWarning) for w in caught)
+
+
+def test_resume_all_corrupt_falls_back_to_init(tmp_path):
+    for s in (10, 20):
+        save_checkpoint(tmp_path, s, _tree(), meta={"next_step": s})
+    _bitflip(tmp_path / "step_00000010" / "manifest.json")
+    _truncate(tmp_path / "step_00000020" / "shard_0.npz")
+    loop = FaultTolerantLoop(tmp_path)
+    init = _tree(0.0)
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        state, step = loop.resume_or_init(init)
+    assert step == 0
+    assert np.array_equal(state["w"], init["w"])
+
+
+def test_resume_intact_path_unchanged(tmp_path):
+    """No corruption: the fallback walk restores exactly what the old
+    single-step path restored."""
+    for s in (10, 20):
+        save_checkpoint(tmp_path, s, _tree(s * 1.0),
+                        meta={"next_step": s})
+    loop = FaultTolerantLoop(tmp_path)
+    state, step = loop.resume_or_init(_tree(0.0))
+    assert step == 20
+    assert np.array_equal(state["w"], _tree(20.0)["w"])
+
+
+def test_bitflipped_shard_payload_detected_by_shape_or_decode(tmp_path):
+    """Flipping bytes inside the npz payload either breaks the zip CRC
+    (load fails) or decodes to the wrong geometry — both typed."""
+    save_checkpoint(tmp_path, 5, _tree())
+    p = tmp_path / "step_00000005" / "shard_0.npz"
+    raw = bytearray(p.read_bytes())
+    for off in range(len(raw) // 2, len(raw) // 2 + 40):
+        raw[off] ^= 0xFF
+    p.write_bytes(bytes(raw))
+    try:
+        restore_checkpoint(tmp_path, _tree(), step=5)
+    except CheckpointCorruptError:
+        pass  # detected (the common case: CRC/zip structure broken)
+    # a surviving load is acceptable only if the data really decoded
+    # with the manifest geometry — numpy CRC-checks on access, so a
+    # clean return means the flipped bytes were padding/naming zones

@@ -356,6 +356,78 @@ def test_pallas_fuzz_corpus_sweep():
         check_pallas_conformance(*_small_fuzz_case(seed))
 
 
+# ---------------------------------------------------------------------------
+# chaos campaigns over fuzzed schedules (core.chaos + core.resilient)
+# ---------------------------------------------------------------------------
+
+
+def _result_region(sched, out):
+    out = np.asarray(out)
+    rows = sched.result_slots
+    return np.stack([out[r, sched.out_offset(r):
+                         sched.out_offset(r) + rows]
+                     for r in range(sched.nranks)])
+
+
+def check_chaos_recovery(seed) -> None:
+    """The metamorphic chaos oracle on a random schedule: under a
+    seeded fault campaign the recovered result region is bitwise
+    identical to the fault-free oracle, or a typed
+    ``UnrecoverableError`` is raised — never a silent mismatch."""
+    from repro.core import chaos
+    from repro.core.resilient import (ResilienceOptions, ResilientExec,
+                                      UnrecoverableError)
+
+    rng = np.random.default_rng(seed)
+    topo = rand_topology(rng)
+    sched = rand_schedule(rng, topo.nranks)
+    n = sched.nranks
+    buf = rng.integers(-8, 8, (n, sched.num_slots, 2)).astype(np.float32)
+    want = _result_region(sched, SimTransport(n).run_reference(sched, buf))
+
+    campaign = ("corrupt", "fail", "hang", "mixed")[int(rng.integers(4))]
+    persistent = rng.random() < 0.25
+    plan = chaos.FaultPlan(
+        int(rng.integers(2 ** 31)), campaign,
+        times=None if persistent else int(rng.integers(1, 3)),
+        max_faults=int(rng.integers(1, 3)), delay_s=0.002)
+    transports = {"sim": chaos.wrap(SimTransport(n), plan)}
+    if persistent and rng.random() < 0.5:
+        # fault the fallback rung too: the typed-error path must fire
+        # (or corruption must land outside the verified region)
+        transports["reference"] = chaos.wrap(SimTransport(n), plan)
+    ex = ResilientExec(
+        sched, topo,
+        options=ResilienceOptions(verify="full", max_retries=1,
+                                  ladder=("sim", "reference"),
+                                  backoff_s=1e-5),
+        transports=transports)
+    try:
+        out, report = ex.run(buf)
+    except UnrecoverableError as e:
+        assert e.report.recovered_with is None     # typed, with the walk
+        return
+    assert _result_region(sched, out).tobytes() == want.tobytes(), (
+        seed, campaign, persistent, report.summary())
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fuzzed_fault_campaigns_recover_or_raise(seed):
+    """Random schedule x random seeded campaign: recovery is bitwise
+    or the error is typed — the data-plane analogue of the
+    bit-exactness conformance sweep above."""
+    check_chaos_recovery(seed)
+
+
+def test_chaos_fuzz_corpus_sweep():
+    """Deterministic floor under the sampled chaos property test: a
+    fixed-seed corpus of fault campaigns, every outcome bitwise-or-
+    typed."""
+    for seed in range(40):
+        check_chaos_recovery(seed)
+
+
 def test_armed_pass_strictly_beats_topology_free_on_staged_multipod():
     """The acceptance bound has teeth: on the width-staggered multi-pod
     staged allgather the armed pass merges rounds the equal-width rule
