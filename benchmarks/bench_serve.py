@@ -1,0 +1,183 @@
+"""Continuous-batching serve benchmark (the ``serve`` section of
+BENCH_transport.json).
+
+Deterministic end to end — the traffic trace is seeded, the engine
+clock is the tick, KV contents are seeded fills, and every transfer is
+verified bitwise against the gather oracle in-engine — so every claim
+is machine-independent and BLOCKING under ``--check-transport``:
+
+  * ``traffic``  — a Poisson multi-tenant trace (bursts, skewed
+    prompt/gen lengths) drained by the disaggregated engine: every
+    arrival completes, TTFT percentiles recorded in steps, KV blocks
+    moved via ragged neighbor plans bit-exact vs the oracle;
+  * ``aggregation`` — replaying the engine's logged move batches in
+    both plan modes: locality-aware must never message DCN more than
+    standard; and a shared-prefix fan-out (one prompt's blocks needed
+    by every decode rank) must cut DCN *bytes* strictly — the Collom
+    et al. dedupe win on real serving traffic;
+  * ``chaos_under_load`` — the same engine with a seeded ``FaultPlan``
+    corrupting the sim rung and ``resilience="full"`` armed: the trace
+    still drains, at least one transfer degrades-and-recovers, and
+    every block lands bitwise (the engine's oracle check runs after
+    the ladder).
+
+Wall-clock tokens/s and transfer walltime ride along as trend signals
+(machine-dependent, never gated).
+
+CLI:
+    PYTHONPATH=src python -m benchmarks.bench_serve
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+TRACE = dict(arrival_rate=6.0, tenants=3, n_requests=40,
+             mean_prompt=24, mean_gen=8)
+
+
+def _engine(**kw):
+    from repro.serve.engine import ContinuousBatchingEngine, EngineConfig
+    transports = kw.pop("transports", None)
+    return ContinuousBatchingEngine(EngineConfig(**kw),
+                                    transports=transports)
+
+
+def bench_serve() -> dict:
+    from repro.core import chaos, kvtransfer
+    from repro.core.topology import Topology
+    from repro.core.transport import SimTransport
+    from repro.serve.traffic import poisson_workload, run_workload
+
+    t0 = time.time()
+    # ---- traffic: Poisson multi-tenant trace through the engine ------
+    eng = _engine()
+    trace = poisson_workload(0, **TRACE)
+    m = run_workload(eng, trace)
+    assert m["completed"] == m["submitted"] == len(trace), m
+    assert all(p.in_use == 0 for p in eng.pools.values()), \
+        "block pools must drain with the trace"
+    traffic = {
+        "seed": 0, "tenants": TRACE["tenants"],
+        "arrival_rate": TRACE["arrival_rate"],
+        "submitted": m["submitted"], "completed": m["completed"],
+        "steps": m["steps"], "tokens": m["tokens"],
+        "tokens_per_step": m["tokens_per_step"],
+        "tokens_per_s": m["tokens_per_s"],          # trend only
+        "ttft_steps": m["ttft_steps"],
+        "preemptions": m["preemptions"],
+        "kv_transfer": m["kv_transfer"],
+        "bitwise_vs_oracle": True,   # engine raises typed otherwise
+    }
+    emit("serve", "traffic.completed",
+         f"{m['completed']}/{m['submitted']}", "requests",
+         f"{TRACE['tenants']} tenants, poisson")
+    emit("serve", "traffic.tokens_per_step", m["tokens_per_step"])
+    emit("serve", "traffic.ttft_p99", m["ttft_steps"]["p99"], "steps")
+    emit("serve", "traffic.kv_bytes", m["kv_transfer"]["bytes"], "B",
+         f"{m['kv_transfer']['plans']} ragged plans")
+
+    # ---- aggregation: both plan modes on the logged move batches -----
+    cfg = eng.cfg
+    std = {"dcn": 0, "msgs_dcn": 0}
+    agg = {"dcn": 0, "msgs_dcn": 0}
+    for x in eng.transfer_log:
+        for mode, acc in ((False, std), (True, agg)):
+            tp = kvtransfer.build_transfer_plan(
+                list(x["moves"]), eng.topo,
+                blocks_per_rank=cfg.blocks_per_rank, aggregate=mode,
+                block_bytes=cfg.block_bytes)
+            tr = tp.traffic()
+            acc["dcn"] += tr["dcn"]
+            acc["msgs_dcn"] += tr["msgs_dcn"]
+    # shared-prefix fan-out: one prompt's blocks cached by EVERY decode
+    # rank (system-prompt reuse) — the dedupe case aggregation exists for
+    topo = Topology(8, 4)
+    prefix = [kvtransfer.BlockMove(src=0, src_row=r, dst=d, dst_row=r)
+              for d in range(4, 8) for r in range(4)]
+    pool = np.asarray(np.random.default_rng(8).normal(
+        size=(8, cfg.blocks_per_rank, 2, 2)), np.float32)
+    pre, prefix_bitwise = {}, True
+    for mode in (False, True):
+        tp = kvtransfer.build_transfer_plan(
+            prefix, topo, blocks_per_rank=cfg.blocks_per_rank,
+            aggregate=mode, block_bytes=cfg.block_bytes)
+        res = kvtransfer.run_transfer(tp, pool)
+        prefix_bitwise &= kvtransfer.verify_bitwise(tp, pool, res)
+        pre["locality_aware" if mode else "standard"] = tp.traffic()
+    aggregation = {
+        "batches": len(eng.transfer_log),
+        "standard_dcn_bytes": std["dcn"],
+        "locality_dcn_bytes": agg["dcn"],
+        "standard_dcn_msgs": std["msgs_dcn"],
+        "locality_dcn_msgs": agg["msgs_dcn"],
+        "msgs_win": bool(agg["msgs_dcn"] <= std["msgs_dcn"]),
+        "shared_prefix": {
+            "moves": len(prefix),
+            "standard_dcn_bytes": pre["standard"]["dcn"],
+            "locality_dcn_bytes": pre["locality_aware"]["dcn"],
+            "bytes_win": bool(pre["locality_aware"]["dcn"]
+                              < pre["standard"]["dcn"]),
+            "bitwise": bool(prefix_bitwise),
+        },
+    }
+    assert aggregation["msgs_win"], aggregation
+    assert aggregation["shared_prefix"]["bytes_win"], aggregation
+    assert aggregation["shared_prefix"]["bitwise"], aggregation
+    emit("serve", "aggregation.dcn_msgs",
+         f"{agg['msgs_dcn']} vs {std['msgs_dcn']}", "msgs",
+         "locality-aware vs standard")
+    emit("serve", "aggregation.shared_prefix",
+         round(pre["standard"]["dcn"]
+               / max(1, pre["locality_aware"]["dcn"]), 2), "x",
+         "DCN byte dedupe")
+
+    # ---- chaos under load: FaultPlan armed during the trace ----------
+    plan = chaos.FaultPlan(0, "corrupt", times=1)
+    n = 8
+    ceng = _engine(
+        resilience={"verify": "full", "ladder": ("sim", "reference"),
+                    "backoff_s": 1e-5},
+        transports={"sim": chaos.wrap(SimTransport(n), plan)})
+    cm = run_workload(ceng, poisson_workload(1, **TRACE))
+    degraded = sum(1 for r in ceng.degradations if r.degraded)
+    chaos_load = {
+        "campaign": "corrupt", "seed": 0,
+        "submitted": cm["submitted"], "completed": cm["completed"],
+        "plans": cm["kv_transfer"]["plans"],
+        "reports": len(ceng.degradations),
+        "degraded_recovered": degraded,
+        "recovered_bitwise": True,   # engine oracle check post-ladder
+    }
+    assert cm["completed"] == cm["submitted"], cm
+    assert degraded >= 1, (
+        "the corrupt campaign must degrade at least one transfer "
+        f"(got {len(ceng.degradations)} reports, 0 degraded)")
+    emit("serve", "chaos.recovered",
+         f"{degraded}/{chaos_load['plans']}", "plans",
+         "degraded + recovered bitwise under load")
+
+    return {"traffic": traffic, "aggregation": aggregation,
+            "chaos_under_load": chaos_load,
+            "elapsed_s": round(time.time() - t0, 3)}
+
+
+def main(argv=()) -> dict:
+    data = bench_serve()
+    print(f"# serve: {data['traffic']['completed']} requests drained, "
+          f"{data['traffic']['kv_transfer']['plans']} transfer plans, "
+          f"chaos degraded/recovered "
+          f"{data['chaos_under_load']['degraded_recovered']}",
+          file=sys.stderr)
+    return data
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+
+    header()
+    main(sys.argv[1:])

@@ -34,6 +34,15 @@ Sections, tracking the compiled-executor wins from that PR onward:
                     verification pricing must stay ordered
                     (off = 0 < canary < full).  BLOCKING under
                     ``--check``.
+  * ``serve``     — continuous batching (the serving PR, see
+                    benchmarks.bench_serve): a seeded Poisson
+                    multi-tenant trace drained by the disaggregated
+                    prefill/decode engine — every arrival completes,
+                    every KV block transfer lands bit-exact vs the
+                    gather oracle, locality-aware plans never message
+                    DCN more than standard (and dedupe shared-prefix
+                    bytes strictly), and the chaos-under-load trace
+                    degrades-and-recovers.  BLOCKING under ``--check``.
 
 CLI:
     PYTHONPATH=src python -m benchmarks.bench_transport \
@@ -616,6 +625,8 @@ def payload() -> dict:
     data["pallas"] = bench_pallas()
     data["fleet"] = bench_fleet()
     data["chaos"] = bench_chaos()
+    from benchmarks.bench_serve import bench_serve
+    data["serve"] = bench_serve()
     data["sim_exec"] = bench_sim_exec()
     data["shardmap"] = bench_shardmap_traces()
     data["elapsed_s"] = round(time.time() - t0, 3)
@@ -760,6 +771,56 @@ def check_against(baseline_path: str, data: dict) -> None:
     print(f"# chaos: {len(ch['campaigns'])} campaigns bitwise-recovered,"
           f" unrecoverable walk bounded at {unrec['attempts']} attempts,"
           f" canary={pr['canary_frac']}x full={pr['full_frac']}x",
+          file=sys.stderr)
+    # serve section: the continuous-batching trace runs on the seeded
+    # sim substrate with an in-engine bitwise oracle — every claim is
+    # machine-independent and blocking
+    sv = data.get("serve")
+    if sv is None:
+        raise SystemExit(
+            "--check: current run's payload lacks the serve section")
+    tr = sv.get("traffic", {})
+    if not tr.get("completed") \
+            or tr.get("completed") != tr.get("submitted"):
+        raise SystemExit(
+            f"--check: continuous-batching trace no longer drains "
+            f"({tr.get('completed')!r}/{tr.get('submitted')!r} "
+            f"requests)")
+    if int(tr.get("tenants", 0)) < 2:
+        raise SystemExit(
+            f"--check: serve trace lost its multi-tenant mix "
+            f"(tenants={tr.get('tenants')!r})")
+    if not tr.get("bitwise_vs_oracle") \
+            or int(tr.get("kv_transfer", {}).get("plans", 0)) < 1:
+        raise SystemExit(
+            f"--check: KV transfers must move via ragged plans and "
+            f"match the gather oracle bitwise: {tr.get('kv_transfer')!r}")
+    if float(tr.get("tokens_per_step", 0)) <= 0 \
+            or "p99" not in tr.get("ttft_steps", {}):
+        raise SystemExit(
+            f"--check: serve throughput/TTFT metrics lost "
+            f"(tokens_per_step={tr.get('tokens_per_step')!r}, "
+            f"ttft={tr.get('ttft_steps')!r})")
+    ag = sv.get("aggregation", {})
+    sp = ag.get("shared_prefix", {})
+    if not ag.get("msgs_win") or not sp.get("bytes_win") \
+            or not sp.get("bitwise"):
+        raise SystemExit(
+            f"--check: locality-aware KV aggregation win lost "
+            f"(msgs_win={ag.get('msgs_win')!r}, "
+            f"shared_prefix={sp!r})")
+    cl = sv.get("chaos_under_load", {})
+    if cl.get("completed") != cl.get("submitted") \
+            or int(cl.get("degraded_recovered", 0)) < 1 \
+            or not cl.get("recovered_bitwise"):
+        raise SystemExit(
+            f"--check: chaos-under-load serving no longer recovers "
+            f"({cl!r})")
+    print(f"# serve: {tr['completed']}/{tr['submitted']} requests, "
+          f"{tr['kv_transfer']['plans']} ragged plans bitwise, "
+          f"shared-prefix dedupe "
+          f"{sp['standard_dcn_bytes']}->{sp['locality_dcn_bytes']}B "
+          f"dcn, chaos degraded/recovered {cl['degraded_recovered']}",
           file=sys.stderr)
 
 

@@ -19,8 +19,10 @@ timing-trend jobs consume.
 
 ``--transport-json PATH`` runs only the persistent-executor transport
 benchmark (topology-free AND topology-armed fusion round counts,
-vectorized sim-exec walltime, shardmap trace counts — see
-benchmarks.bench_transport) and writes its JSON;
+vectorized sim-exec walltime, shardmap trace counts, plus the blocking
+fleet / chaos / serve model-level sections — see
+benchmarks.bench_transport and benchmarks.bench_serve) and writes its
+JSON;
 ``--check-transport BASELINE`` adds the non-blocking >2x walltime trend
 warning against the committed ``BENCH_transport.json`` — but exits
 non-zero when the baseline file is missing or malformed (a disarmed

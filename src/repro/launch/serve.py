@@ -1,7 +1,11 @@
-"""Serving launcher: batched prefill + greedy decode with a KV cache.
+"""Serving launcher: batched prefill + greedy decode with a KV cache,
+and the continuous-batching traffic-simulator path.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --smoke --batch 4 --prompt-len 32 --gen 16
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --smoke --continuous --arrival-rate 6 --tenants 3 --requests 48
 """
 from __future__ import annotations
 
@@ -16,7 +20,59 @@ from repro import compat, configs
 from repro.core import api as mpix_api
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
-from repro.serve.step import ServeOptions, make_decode_step
+from repro.serve.step import ServeOptions, jit_decode_step
+
+
+def _run_continuous(args, cfg) -> dict:
+    """Continuous batching: drive the engine through a seeded Poisson
+    multi-tenant trace; KV blocks move prefill-pool -> decode-pool via
+    ragged neighbor plans on ``--kv-transport`` (resilience ladder when
+    ``--resilience`` is armed)."""
+    from repro.serve.engine import ContinuousBatchingEngine, EngineConfig
+    from repro.serve.traffic import poisson_workload, run_workload
+
+    resilience = None
+    if args.resilience != "off":
+        # lead the ladder with the requested substrate; keep the walk on
+        # host rungs so per-batch plans never pay a device compile
+        lead = args.kv_transport if args.kv_transport != "reference" \
+            else "sim"
+        ladder = tuple(dict.fromkeys((lead, "sim", "reference")))
+        resilience = {"verify": args.resilience, "ladder": ladder,
+                      "backoff_s": 1e-4}
+    ecfg = EngineConfig(
+        blocks_per_rank=args.kv_blocks,
+        block_feat=(getattr(cfg, "head_dim", None) or 16),
+        transport=args.kv_transport,
+        resilience=resilience,
+        policy=args.select_policy)
+    engine = ContinuousBatchingEngine(ecfg)
+    trace = poisson_workload(args.seed, arrival_rate=args.arrival_rate,
+                             tenants=args.tenants,
+                             n_requests=args.requests,
+                             max_prompt=args.kv_blocks
+                             * ecfg.block_tokens // 2)
+    t0 = time.time()
+    metrics = run_workload(engine, trace)
+    dt = time.time() - t0
+    kv = metrics["kv_transfer"]
+    print(f"continuous: {metrics['completed']}/{metrics['submitted']} "
+          f"requests over {args.tenants} tenants in "
+          f"{metrics['steps']} steps ({dt:.2f}s), "
+          f"{metrics['tokens']} tokens "
+          f"({metrics['tokens_per_step']} tok/step, "
+          f"{metrics['tokens_per_s']} tok/s)")
+    print(f"ttft: mean {metrics['ttft_steps']['mean']} steps, "
+          f"p99 {metrics['ttft_steps']['p99']}; "
+          f"preemptions {metrics['preemptions']}")
+    print(f"kv-transfer: {kv['plans']} plans, {kv['blocks']} blocks, "
+          f"{kv['bytes']}B ({kv['dcn_bytes']}B dcn / "
+          f"{kv['ici_bytes']}B ici) via {kv['plan_names']}, "
+          f"{kv['wall_s']}s wall")
+    if metrics["degradations"]:
+        print(f"resilience: {metrics['degradations']} degradation "
+              f"report(s) collected")
+    return metrics
 
 
 def main(argv=None):
@@ -61,10 +117,64 @@ def main(argv=None):
                          "per-size choice (auto)")
     ap.add_argument("--resilience", default="off",
                     choices=["off", "canary", "full"],
-                    help="chaos-resilient EP dispatch collectives: arm "
-                         "the recovery ladder; canary/full set the "
-                         "host-level verification mode")
+                    help="arm the chaos-recovery ladder on the serve "
+                         "collectives: EP dispatch (needs "
+                         "--ep-transport) and/or continuous-mode KV "
+                         "transfers (--continuous); canary/full set "
+                         "the host-level verification mode")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching mode: drive the "
+                         "disaggregated prefill/decode engine through "
+                         "a seeded Poisson multi-tenant trace; KV "
+                         "blocks move between pools via ragged "
+                         "neighbor plans")
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="continuous mode: mean requests/sec of the "
+                         "Poisson arrival process")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="continuous mode: tenant count of the bursty "
+                         "traffic mix (each tenant has its own "
+                         "prompt/gen length skew)")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="continuous mode: trace length")
+    ap.add_argument("--kv-transport", default="sim",
+                    choices=["sim", "reference", "shardmap", "pallas"],
+                    help="continuous mode: substrate executing the KV "
+                         "block-transfer schedules (shardmap needs one "
+                         "device per engine rank)")
+    ap.add_argument("--kv-blocks", type=int, default=32,
+                    help="continuous mode: KV blocks per engine rank")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="continuous mode: trace seed")
     args = ap.parse_args(argv)
+
+    # ---- argument validation (fail loudly, never deep in the loop) ----
+    if args.gen < 1:
+        ap.error(f"--gen must be >= 1 (got {args.gen}): generating "
+                 f"zero tokens leaves nothing to stack or serve")
+    if args.prompt_len < 1:
+        ap.error(f"--prompt-len must be >= 1 (got {args.prompt_len})")
+    if args.batch < 1:
+        ap.error(f"--batch must be >= 1 (got {args.batch})")
+    if args.continuous:
+        if args.arrival_rate <= 0:
+            ap.error(f"--arrival-rate must be > 0 "
+                     f"(got {args.arrival_rate})")
+        if args.tenants < 1:
+            ap.error(f"--tenants must be >= 1 (got {args.tenants})")
+        if args.requests < 1:
+            ap.error(f"--requests must be >= 1 (got {args.requests})")
+    if args.resilience != "off" and args.ep_transport is None \
+            and not args.continuous:
+        # resilience only threads through the EP dispatch and the KV
+        # transfer collectives; without either armed it silently
+        # protected nothing — fail loudly instead (satellite bugfix)
+        raise SystemExit(
+            f"--resilience {args.resilience} has nothing to protect: "
+            f"the single-shot decode path runs no mpix collectives. "
+            f"Arm a protected path with --ep-transport "
+            f"shardmap|pallas|auto (EP dispatch) or --continuous "
+            f"(KV-cache transfers), or drop --resilience.")
 
     mpix_api.set_default_policy(args.select_policy)
     cfg = (configs.get_smoke(args.arch) if args.smoke
@@ -85,55 +195,69 @@ def main(argv=None):
         for d in daemons:
             d.start(interval_s=args.heal_interval)
 
-    max_len = args.prompt_len + args.gen
-    with compat.set_mesh(mesh):
-        params = M.init_params(jax.random.key(0), cfg)
-        prompts = jax.random.randint(
-            jax.random.key(1), (args.batch, args.prompt_len), 2,
-            cfg.vocab_size)
-        cross = None
-        if cfg.encoder is not None:
-            frames = jax.random.normal(
-                jax.random.key(2),
-                (args.batch, cfg.encoder.n_frames, cfg.encoder.d_model),
-                jnp.bfloat16)
-            cross = M.encode(params, cfg, frames)
+    # daemons must stop even when the serve body raises (leak fix):
+    # same pattern train's FaultTolerantLoop uses for signal handlers
+    try:
+        max_len = args.prompt_len + args.gen
+        with compat.set_mesh(mesh):
+            if args.continuous:
+                return _run_continuous(args, cfg)
 
-        cache = M.init_cache(cfg, args.batch, max_len)
-        ep_options = None
-        if args.ep_transport is not None:
-            from repro.train.moe_dispatch import EPOptions
-            ep_options = EPOptions(alltoall=args.ep_alltoall,
-                                   transport=args.ep_transport,
-                                   policy=args.select_policy)
-        opts = ServeOptions(ep_options=ep_options,
-                            resilience=(None if args.resilience == "off"
-                                        else args.resilience))
-        decode = jax.jit(make_decode_step(cfg, mesh, opts))
+            params = M.init_params(jax.random.key(0), cfg)
+            prompts = jax.random.randint(
+                jax.random.key(1), (args.batch, args.prompt_len), 2,
+                cfg.vocab_size)
+            cross = None
+            if cfg.encoder is not None:
+                frames = jax.random.normal(
+                    jax.random.key(2),
+                    (args.batch, cfg.encoder.n_frames,
+                     cfg.encoder.d_model),
+                    jnp.bfloat16)
+                cross = M.encode(params, cfg, frames)
 
-        # prefill token-by-token through the decode step (keeps one
-        # compiled program; the batched-prefill path is exercised by the
-        # dry-run and benches)
-        t0 = time.time()
-        tok = prompts[:, :1]
-        outs = []
-        for i in range(max_len - 1):
-            a = (params, cache, tok) if cfg.encoder is None else \
-                (params, cache, tok, cross)
-            nxt, cache = decode(*a)
-            if i + 1 < args.prompt_len:
-                tok = prompts[:, i + 1: i + 2]      # teacher-forced
-            else:
-                tok = nxt
-                outs.append(np.asarray(nxt)[:, 0])
-        dt = time.time() - t0
-    for d in daemons:
-        d.stop()
-        healed = sum(1 for r in d.reports if r.healed)
-        if healed:
-            print(f"tuner daemon: {len(d.reports)} probe pass(es), "
-                  f"{healed} heal(s) on {d.topo.fingerprint()}")
-    gen = np.stack(outs, 1)
+            cache = M.init_cache(cfg, args.batch, max_len)
+            ep_options = None
+            if args.ep_transport is not None:
+                from repro.train.moe_dispatch import EPOptions
+                ep_options = EPOptions(alltoall=args.ep_alltoall,
+                                       transport=args.ep_transport,
+                                       policy=args.select_policy)
+            opts = ServeOptions(
+                ep_options=ep_options,
+                resilience=(None if args.resilience == "off"
+                            else args.resilience))
+            # jit through jit_decode_step so params/cache carry their
+            # NamedShardings — a bare jax.jit silently replicated the
+            # cache on multi-device meshes (satellite bugfix)
+            decode, (pspec, cspec) = jit_decode_step(
+                cfg, mesh, opts, params, cache)
+
+            # prefill token-by-token through the decode step (keeps one
+            # compiled program; the batched-prefill path is exercised by
+            # the dry-run and benches)
+            t0 = time.time()
+            tok = prompts[:, :1]
+            outs = []
+            for i in range(max_len - 1):
+                a = (params, cache, tok) if cfg.encoder is None else \
+                    (params, cache, tok, cross)
+                nxt, cache = decode(*a)
+                if i + 1 < args.prompt_len:
+                    tok = prompts[:, i + 1: i + 2]      # teacher-forced
+                else:
+                    tok = nxt
+                    outs.append(np.asarray(nxt)[:, 0])
+            dt = time.time() - t0
+    finally:
+        for d in daemons:
+            d.stop()
+            healed = sum(1 for r in d.reports if r.healed)
+            if healed:
+                print(f"tuner daemon: {len(d.reports)} probe pass(es), "
+                      f"{healed} heal(s) on {d.topo.fingerprint()}")
+    gen = (np.stack(outs, 1) if outs
+           else np.zeros((args.batch, 0), np.int32))
     print(f"generated {gen.shape} in {dt:.2f}s "
           f"({(max_len - 1) * args.batch / dt:.1f} tok/s)")
     print(gen[:, :12])

@@ -1,2 +1,7 @@
 from repro.serve.step import (  # noqa: F401
-    ServeOptions, make_decode_step, make_prefill_step, init_serve_cache)
+    ServeOptions, jit_decode_step, make_decode_step, make_prefill_step,
+    init_serve_cache)
+from repro.serve.engine import (  # noqa: F401
+    BlockPool, ContinuousBatchingEngine, DoubleFreeError, EngineConfig,
+    EngineStall, Request, TransferVerificationError)
+from repro.serve.traffic import poisson_workload, run_workload  # noqa: F401

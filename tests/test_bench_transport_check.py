@@ -49,9 +49,22 @@ GOOD_CHAOS = {
     "verify_pricing": {"off_s": 0.0, "canary_frac": 0.07,
                        "full_frac": 1.15},
 }
+GOOD_SERVE = {
+    "traffic": {"completed": 40, "submitted": 40, "tenants": 3,
+                "bitwise_vs_oracle": True, "tokens_per_step": 2.8,
+                "ttft_steps": {"mean": 1.0, "p50": 1.0, "p99": 1.0},
+                "kv_transfer": {"plans": 20, "bytes": 84992}},
+    "aggregation": {"msgs_win": True,
+                    "shared_prefix": {"bytes_win": True, "bitwise": True,
+                                      "standard_dcn_bytes": 8192,
+                                      "locality_dcn_bytes": 2048}},
+    "chaos_under_load": {"completed": 40, "submitted": 40,
+                         "degraded_recovered": 2,
+                         "recovered_bitwise": True},
+}
 GOOD_DATA = {"sim_exec": {"speedup": 8.0, "compiled_total_s": 0.1},
              "pallas": GOOD_PALLAS, "fleet": GOOD_FLEET,
-             "chaos": GOOD_CHAOS}
+             "chaos": GOOD_CHAOS, "serve": GOOD_SERVE}
 
 
 def test_check_missing_baseline_exits_nonzero(tmp_path):
@@ -249,6 +262,66 @@ def test_committed_baseline_has_chaos_claims():
     pr = ch["verify_pricing"]
     assert pr["off_s"] == 0.0
     assert 0.0 < pr["canary_frac"] < pr["full_frac"]
+
+
+def test_check_lost_serve_claims_exits_nonzero(tmp_path):
+    """The serve section runs a seeded trace on the sim substrate with
+    an in-engine bitwise oracle — every claim is machine-independent: a
+    trace that no longer drains, a single-tenant mix, a lost bitwise
+    KV-transfer match, a lost shared-prefix dedupe win, a dead
+    chaos-under-load recovery, or a missing section all block."""
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"sim_exec": {"speedup": 8.0}}))
+    import copy
+
+    stuck = copy.deepcopy(GOOD_DATA)
+    stuck["serve"]["traffic"]["completed"] = 39
+    with pytest.raises(SystemExit, match="no longer drains"):
+        bench_transport.check_against(str(base), stuck)
+    mono = copy.deepcopy(GOOD_DATA)
+    mono["serve"]["traffic"]["tenants"] = 1
+    with pytest.raises(SystemExit, match="multi-tenant"):
+        bench_transport.check_against(str(base), mono)
+    drift = copy.deepcopy(GOOD_DATA)
+    drift["serve"]["traffic"]["bitwise_vs_oracle"] = False
+    with pytest.raises(SystemExit, match="gather oracle"):
+        bench_transport.check_against(str(base), drift)
+    fat = copy.deepcopy(GOOD_DATA)
+    fat["serve"]["aggregation"]["shared_prefix"]["bytes_win"] = False
+    with pytest.raises(SystemExit):
+        bench_transport.check_against(str(base), fat)
+    fragile = copy.deepcopy(GOOD_DATA)
+    fragile["serve"]["chaos_under_load"]["degraded_recovered"] = 0
+    with pytest.raises(SystemExit, match="no longer recovers"):
+        bench_transport.check_against(str(base), fragile)
+    gone = {k: v for k, v in GOOD_DATA.items() if k != "serve"}
+    with pytest.raises(SystemExit, match="serve"):
+        bench_transport.check_against(str(base), gone)
+
+
+def test_committed_baseline_has_serve_claims():
+    """The committed artifact must record the serving-path acceptance
+    numbers: the multi-tenant Poisson trace drains bit-exact vs the
+    gather oracle over >= 1 ragged plan, the shared-prefix locality
+    dedupe strictly cuts DCN bytes, and the chaos-under-load trace
+    recovers."""
+    committed = Path(__file__).resolve().parents[1] / "BENCH_transport.json"
+    with open(committed) as fh:
+        data = json.load(fh)
+    sv = data["serve"]
+    tr = sv["traffic"]
+    assert tr["completed"] == tr["submitted"] >= 1
+    assert tr["tenants"] >= 2
+    assert tr["bitwise_vs_oracle"] is True
+    assert tr["kv_transfer"]["plans"] >= 1
+    assert tr["ttft_steps"]["p99"] >= tr["ttft_steps"]["p50"]
+    sp = sv["aggregation"]["shared_prefix"]
+    assert sp["bitwise"] is True
+    assert sp["locality_dcn_bytes"] < sp["standard_dcn_bytes"]
+    cl = sv["chaos_under_load"]
+    assert cl["completed"] == cl["submitted"]
+    assert cl["degraded_recovered"] >= 1
+    assert cl["recovered_bitwise"] is True
 
 
 def test_committed_baseline_has_makespan_wins():

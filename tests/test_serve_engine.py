@@ -1,0 +1,324 @@
+"""Continuous-batching engine: state-machine invariants, KV-transfer
+bit-exactness vs the gather oracle, and chaos under load.
+
+Shardmap/pallas transport bit-exactness for the transfer plans runs in
+the 8-device subprocess script (tests/device_scripts/check_serve.py,
+registered in test_shardmap.py); this module covers everything that is
+exact on the host sim substrate."""
+import numpy as np
+import pytest
+
+from repro.core import chaos, kvtransfer
+from repro.core.resilient import UnrecoverableError
+from repro.core.topology import Topology
+from repro.core.transport import SimTransport
+from repro.serve.engine import (BlockPool, ContinuousBatchingEngine,
+                                DoubleFreeError, EngineConfig, EngineStall,
+                                Request, TransferVerificationError)
+from repro.serve.traffic import poisson_workload, run_workload
+
+SMALL = dict(prefill_ranks=2, decode_ranks=2, ranks_per_pod=2,
+             blocks_per_rank=16, block_tokens=4, block_feat=8)
+
+
+# ---------------------------------------------------------------------------
+# block pool
+# ---------------------------------------------------------------------------
+
+
+class TestBlockPool:
+    def test_alloc_free_roundtrip(self):
+        p = BlockPool(8)
+        a = p.alloc(3)
+        b = p.alloc(5)
+        assert sorted(a + b) == list(range(8))
+        assert p.available == 0 and p.in_use == 8
+        p.free(a)
+        p.free(b)
+        assert p.available == 8 and p.in_use == 0
+
+    def test_exhaustion_returns_none(self):
+        p = BlockPool(4)
+        assert p.alloc(5) is None           # too big outright
+        a = p.alloc(3)
+        assert a is not None and p.alloc(2) is None
+        assert p.available == 1             # failed alloc takes nothing
+
+    def test_double_free_raises(self):
+        p = BlockPool(4)
+        a = p.alloc(2)
+        p.free(a)
+        with pytest.raises(DoubleFreeError):
+            p.free(a)
+
+    def test_free_never_allocated_raises(self):
+        p = BlockPool(4)
+        p.alloc(1)
+        with pytest.raises(DoubleFreeError):
+            p.free([3])
+
+
+# ---------------------------------------------------------------------------
+# transfer plans: ragged IR vs the gather oracle
+# ---------------------------------------------------------------------------
+
+
+def _random_moves(rng, topo, blocks_per_rank, n_moves, *,
+                  src_ranks, dst_ranks, shared_frac=0.3):
+    """Random valid move batch; ``shared_frac`` makes some source
+    blocks fan out to several destinations (the dedupe case)."""
+    moves, dst_used = [], set()
+    shared = [(int(rng.integers(len(src_ranks))),
+               int(rng.integers(blocks_per_rank)))
+              for _ in range(max(1, blocks_per_rank // 4))]
+    while len(moves) < n_moves:
+        if rng.random() < shared_frac:
+            si, row = shared[int(rng.integers(len(shared)))]
+            s = src_ranks[si]
+        else:
+            s = src_ranks[int(rng.integers(len(src_ranks)))]
+            row = int(rng.integers(blocks_per_rank))
+        d = dst_ranks[int(rng.integers(len(dst_ranks)))]
+        dr = int(rng.integers(blocks_per_rank))
+        if (d, dr) in dst_used:
+            continue
+        dst_used.add((d, dr))
+        moves.append(kvtransfer.BlockMove(s, row, d, dr))
+    return moves
+
+
+class TestTransferPlan:
+    @pytest.mark.parametrize("aggregate", [False, True, None])
+    @pytest.mark.parametrize("transport", ["sim", "reference"])
+    def test_bit_exact_vs_oracle(self, aggregate, transport):
+        rng = np.random.default_rng(0)
+        topo = Topology(8, 4)
+        B = 12
+        pool = rng.normal(size=(8, B, 3, 2)).astype(np.float32)
+        for trial in range(3):
+            moves = _random_moves(rng, topo, B, 10 + 5 * trial,
+                                  src_ranks=range(4),
+                                  dst_ranks=range(4, 8))
+            tp = kvtransfer.build_transfer_plan(
+                moves, topo, blocks_per_rank=B, aggregate=aggregate,
+                block_bytes=24)
+            res = kvtransfer.run_transfer(tp, pool, transport=transport)
+            assert kvtransfer.verify_bitwise(tp, pool, res), \
+                (aggregate, transport, trial)
+
+    def test_landing_mode_independent(self):
+        """Both plan modes land every block on the same dst rows with
+        the same bytes (the recv-layout interchangeability claim)."""
+        rng = np.random.default_rng(1)
+        topo = Topology(8, 4)
+        pool = rng.normal(size=(8, 8, 2, 2)).astype(np.float32)
+        moves = _random_moves(rng, topo, 8, 12, src_ranks=range(4),
+                              dst_ranks=range(4, 8))
+        outs = []
+        for agg in (False, True):
+            tp = kvtransfer.build_transfer_plan(
+                moves, topo, blocks_per_rank=8, aggregate=agg,
+                block_bytes=16)
+            res = kvtransfer.run_transfer(tp, pool)
+            outs.append({d: (r.tobytes(), v.tobytes())
+                         for d, (r, v) in res.updates.items()})
+        assert outs[0] == outs[1]
+
+    def test_shared_prefix_dedupe(self):
+        """One source block fanned to every decode rank: the
+        locality-aware plan ships it over DCN once per pod pair."""
+        topo = Topology(8, 4)
+        moves = [kvtransfer.BlockMove(0, r, d, r)
+                 for d in range(4, 8) for r in range(4)]
+        std = kvtransfer.build_transfer_plan(
+            moves, topo, blocks_per_rank=8, aggregate=False,
+            block_bytes=64)
+        agg = kvtransfer.build_transfer_plan(
+            moves, topo, blocks_per_rank=8, aggregate=True,
+            block_bytes=64)
+        assert agg.traffic()["dcn"] < std.traffic()["dcn"]
+        assert agg.traffic()["msgs_dcn"] < std.traffic()["msgs_dcn"]
+
+    def test_invalid_moves_rejected(self):
+        topo = Topology(4, 2)
+        mk = kvtransfer.BlockMove
+        with pytest.raises(ValueError, match="empty"):
+            kvtransfer.build_transfer_plan([], topo, blocks_per_rank=4)
+        with pytest.raises(ValueError, match="one rank"):
+            kvtransfer.build_transfer_plan(
+                [mk(1, 0, 1, 1)], topo, blocks_per_rank=4)
+        with pytest.raises(ValueError, match="outside pool"):
+            kvtransfer.build_transfer_plan(
+                [mk(0, 7, 2, 0)], topo, blocks_per_rank=4)
+        with pytest.raises(ValueError, match="land on dst row"):
+            kvtransfer.build_transfer_plan(
+                [mk(0, 0, 2, 1), mk(1, 3, 2, 1)], topo,
+                blocks_per_rank=4)
+
+    def test_resilient_transfer_reports(self):
+        rng = np.random.default_rng(2)
+        topo = Topology(4, 2)
+        pool = rng.normal(size=(4, 6, 2, 2)).astype(np.float32)
+        moves = _random_moves(rng, topo, 6, 6, src_ranks=range(2),
+                              dst_ranks=range(2, 4))
+        tp = kvtransfer.build_transfer_plan(
+            moves, topo, blocks_per_rank=6, block_bytes=16)
+        res = kvtransfer.run_transfer(
+            tp, pool, resilience={"verify": "full",
+                                  "ladder": ("sim", "reference"),
+                                  "backoff_s": 1e-5})
+        assert res.report is not None and not res.report.degraded
+        assert kvtransfer.verify_bitwise(tp, pool, res)
+
+
+# ---------------------------------------------------------------------------
+# engine state machine
+# ---------------------------------------------------------------------------
+
+
+class TestEngine:
+    def test_trace_drains_and_pools_free(self):
+        eng = ContinuousBatchingEngine(EngineConfig(**SMALL))
+        trace = poisson_workload(0, arrival_rate=8.0, tenants=2,
+                                 n_requests=24, mean_prompt=10,
+                                 mean_gen=5, max_prompt=24)
+        m = run_workload(eng, trace)
+        assert m["completed"] == m["submitted"] == 24
+        assert all(p.in_use == 0 for p in eng.pools.values())
+        assert m["tokens"] == sum(r.gen_len for r in eng.done)
+        assert m["kv_transfer"]["plans"] >= 1
+        assert m["kv_transfer"]["bytes"] > 0
+
+    def test_fifo_admission_no_starvation(self):
+        """Admission follows arrival order exactly (head-of-line):
+        an early long request is never starved by later short ones."""
+        eng = ContinuousBatchingEngine(EngineConfig(**SMALL))
+        reqs = [Request(rid=0, tenant=0, prompt_len=40, gen_len=4,
+                        arrival=0.0)]
+        reqs += [Request(rid=i, tenant=1, prompt_len=4, gen_len=2,
+                         arrival=0.01 * i) for i in range(1, 16)]
+        m = run_workload(eng, reqs, dt=1.0)
+        assert m["completed"] == 16
+        by_arrival = sorted(eng.done, key=lambda r: (r.arrival, r.rid))
+        admitted = [r.admitted_step for r in by_arrival]
+        assert admitted == sorted(admitted), admitted
+
+    def test_eviction_on_decode_oom(self):
+        """A decode pool that fits two requests serving three: the
+        youngest decoding request is preempted back to WAITING and
+        everything still completes."""
+        cfg = EngineConfig(prefill_ranks=2, decode_ranks=2,
+                           ranks_per_pod=2, blocks_per_rank=2,
+                           block_tokens=4, block_feat=4)
+        eng = ContinuousBatchingEngine(cfg)
+        reqs = [Request(rid=i, tenant=0, prompt_len=8, gen_len=12,
+                        arrival=0.0) for i in range(3)]
+        m = run_workload(eng, reqs, dt=1.0)
+        assert m["completed"] == 3
+        assert m["preemptions"] >= 1
+        assert all(p.in_use == 0 for p in eng.pools.values())
+
+    def test_eviction_requeues_in_arrival_order(self):
+        cfg = EngineConfig(prefill_ranks=2, decode_ranks=2,
+                           ranks_per_pod=2, blocks_per_rank=2,
+                           block_tokens=4, block_feat=4)
+        eng = ContinuousBatchingEngine(cfg)
+        for i in range(3):
+            eng.submit(Request(rid=i, tenant=0, prompt_len=8,
+                               gen_len=12, arrival=float(i)))
+        while eng.preemptions == 0 and eng.pending:
+            eng.step()
+        assert eng.preemptions >= 1
+        victims = [r for r in eng.waiting if r.preemptions > 0]
+        assert victims, "preempted request must re-enter the queue"
+        arrivals = [r.arrival for r in eng.waiting]
+        assert arrivals == sorted(arrivals)
+
+    def test_oversized_request_stalls_typed(self):
+        """A request that can never fit the decode pool ends in a typed
+        EngineStall, not an infinite loop."""
+        cfg = EngineConfig(prefill_ranks=2, decode_ranks=2,
+                           ranks_per_pod=2, blocks_per_rank=4,
+                           block_tokens=4, block_feat=4)
+        eng = ContinuousBatchingEngine(cfg)
+        eng.submit(Request(rid=0, tenant=0, prompt_len=64, gen_len=4,
+                           arrival=0.0))
+        with pytest.raises(EngineStall):
+            eng.run(max_steps=64)
+
+    def test_transfer_corruption_is_typed(self, monkeypatch):
+        """A transport that lies about the payload must surface as a
+        typed TransferVerificationError, never a silent cache."""
+        real = kvtransfer.run_transfer
+
+        def corrupting(tp, pool, **kw):
+            res = real(tp, pool, **kw)
+            for d, (rows, vals) in res.updates.items():
+                vals = vals.copy()
+                vals.flat[0] += 1.0
+                res.updates[d] = (rows, vals)
+                break
+            return res
+
+        monkeypatch.setattr(kvtransfer, "run_transfer", corrupting)
+        eng = ContinuousBatchingEngine(EngineConfig(**SMALL))
+        eng.submit(Request(rid=0, tenant=0, prompt_len=4, gen_len=2,
+                           arrival=0.0))
+        with pytest.raises(TransferVerificationError):
+            eng.run(max_steps=16)
+
+    def test_multi_tenant_metrics(self):
+        eng = ContinuousBatchingEngine(EngineConfig(**SMALL))
+        trace = poisson_workload(3, arrival_rate=6.0, tenants=3,
+                                 n_requests=18, max_prompt=24)
+        assert len({r.tenant for r in trace}) >= 2
+        m = run_workload(eng, trace)
+        assert m["completed"] == 18
+        assert m["tokens_per_step"] > 0
+        assert m["ttft_steps"]["p99"] >= m["ttft_steps"]["p50"] >= 0
+        assert m["kv_transfer"]["dcn_bytes"] > 0   # pools cross pods
+
+
+# ---------------------------------------------------------------------------
+# chaos under load
+# ---------------------------------------------------------------------------
+
+
+class TestChaosUnderLoad:
+    def _engine(self, plan, *, ladder=("sim", "reference"),
+                wrap_reference=False):
+        n = EngineConfig(**SMALL).topology().nranks
+        transports = {"sim": chaos.wrap(SimTransport(n), plan)}
+        if wrap_reference:
+            transports["reference"] = chaos.wrap(SimTransport(n), plan)
+        cfg = EngineConfig(**SMALL, resilience={
+            "verify": "full", "ladder": ladder, "backoff_s": 1e-5})
+        return ContinuousBatchingEngine(cfg, transports=transports)
+
+    @pytest.mark.parametrize("campaign", ["corrupt", "fail", "mixed"])
+    def test_faulted_decode_recovers_bitwise(self, campaign):
+        """FaultPlan armed while the trace decodes: transfers degrade
+        through the ladder and still land bitwise (the engine's oracle
+        check runs on the ladder's output)."""
+        plan = chaos.FaultPlan(0, campaign, times=1, delay_s=1e-4)
+        eng = self._engine(plan)
+        trace = poisson_workload(0, arrival_rate=8.0, tenants=2,
+                                 n_requests=12, max_prompt=24)
+        m = run_workload(eng, trace)
+        assert m["completed"] == 12
+        assert len(eng.degradations) == m["kv_transfer"]["plans"]
+        degraded = sum(1 for r in eng.degradations if r.degraded)
+        assert degraded >= 1, (
+            f"campaign {campaign} never fired across "
+            f"{len(eng.degradations)} transfer plans")
+        assert all(p.in_use == 0 for p in eng.pools.values())
+
+    def test_persistent_fault_raises_typed(self):
+        """Every rung persistently faulted: the engine surfaces the
+        typed UnrecoverableError instead of looping or corrupting."""
+        plan = chaos.FaultPlan(0, "fail", times=None)
+        eng = self._engine(plan, wrap_reference=True)
+        eng.submit(Request(rid=0, tenant=0, prompt_len=4, gen_len=2,
+                           arrival=0.0))
+        with pytest.raises(UnrecoverableError):
+            eng.run(max_steps=16)

@@ -1,0 +1,172 @@
+"""Regression tests for the serve-launcher bugfix sweep.
+
+Four launcher bugs, each with its own test:
+  1. ``--resilience`` was a silent no-op without ``--ep-transport``;
+  2. ``--gen 0`` crashed in ``np.stack`` on an empty list;
+  3. heal daemons leaked when the decode loop raised;
+  4. bare ``jax.jit`` ignored ``jit_decode_step``'s shardings.
+Plus the ``--continuous`` path smoke (Poisson arrivals, >=2 tenants).
+"""
+import pytest
+
+from repro.launch import serve
+
+ARCH = ["--arch", "smollm-360m", "--smoke"]
+
+
+# ---------------------------------------------------------------------------
+# bug 2: argument validation (no more empty-generation crash)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("flags", [
+    ["--gen", "0"],
+    ["--gen", "-3"],
+    ["--prompt-len", "0"],
+    ["--batch", "0"],
+])
+def test_degenerate_sizes_rejected_with_clear_error(flags, capsys):
+    with pytest.raises(SystemExit) as ei:
+        serve.main(ARCH + flags)
+    assert ei.value.code == 2            # argparse error, not a traceback
+    err = capsys.readouterr().err
+    assert "must be >= 1" in err
+
+
+@pytest.mark.parametrize("flags", [
+    ["--continuous", "--arrival-rate", "0"],
+    ["--continuous", "--tenants", "0"],
+    ["--continuous", "--requests", "0"],
+])
+def test_degenerate_continuous_flags_rejected(flags):
+    with pytest.raises(SystemExit):
+        serve.main(ARCH + flags)
+
+
+# ---------------------------------------------------------------------------
+# bug 1: resilience with nothing to protect fails loudly
+# ---------------------------------------------------------------------------
+
+
+def test_resilience_without_protected_path_fails_loudly():
+    with pytest.raises(SystemExit, match="nothing to protect"):
+        serve.main(ARCH + ["--resilience", "canary"])
+    with pytest.raises(SystemExit, match="nothing to protect"):
+        serve.main(ARCH + ["--resilience", "full"])
+
+
+def test_resilience_armed_by_continuous_kv_transfers():
+    """--continuous arms the KV-transfer recovery ladder, so the same
+    flag combination is no longer a no-op (every transfer runs through
+    ResilientExec and reports)."""
+    m = serve.main(ARCH + ["--continuous", "--resilience", "canary",
+                           "--requests", "6", "--tenants", "2",
+                           "--arrival-rate", "8"])
+    assert m["completed"] == m["submitted"] == 6
+    assert m["degradations"] == m["kv_transfer"]["plans"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# bug 3: heal daemons stop even when the serve body raises
+# ---------------------------------------------------------------------------
+
+
+class _DaemonSpy:
+    def __init__(self):
+        self.started = self.stopped = False
+        self.reports = []
+
+    def start(self, interval_s):
+        self.started = True
+
+    def stop(self):
+        self.stopped = True
+
+
+def test_heal_daemons_stopped_when_decode_raises(monkeypatch):
+    import repro.launch.train as train_mod
+
+    spy = _DaemonSpy()
+    monkeypatch.setattr(train_mod, "heal_daemons",
+                        lambda mesh, every: [spy])
+
+    def boom(*a, **k):
+        raise RuntimeError("decode exploded")
+
+    monkeypatch.setattr(serve, "jit_decode_step", boom)
+    with pytest.raises(RuntimeError, match="decode exploded"):
+        serve.main(ARCH + ["--heal-interval", "0.05",
+                           "--prompt-len", "2", "--gen", "1",
+                           "--batch", "1"])
+    assert spy.started and spy.stopped, (
+        "daemons must be stopped in the finally block even when the "
+        "serve body raises")
+
+
+def test_heal_daemons_stopped_on_continuous_failure(monkeypatch):
+    import repro.launch.train as train_mod
+
+    spy = _DaemonSpy()
+    monkeypatch.setattr(train_mod, "heal_daemons",
+                        lambda mesh, every: [spy])
+    monkeypatch.setattr(serve, "_run_continuous",
+                        lambda args, cfg: (_ for _ in ()).throw(
+                            RuntimeError("engine exploded")))
+    with pytest.raises(RuntimeError, match="engine exploded"):
+        serve.main(ARCH + ["--heal-interval", "0.05", "--continuous",
+                           "--requests", "4"])
+    assert spy.started and spy.stopped
+
+
+# ---------------------------------------------------------------------------
+# bug 4: launcher routes through jit_decode_step (sharded, not bare jit)
+# ---------------------------------------------------------------------------
+
+
+def test_launcher_uses_jit_decode_step_shardings(monkeypatch):
+    from repro.serve.step import jit_decode_step as real
+
+    calls = []
+
+    def spy(cfg, mesh, opts, params, cache):
+        out = real(cfg, mesh, opts, params, cache)
+        calls.append(out[1])             # (pspec, cspec)
+        return out
+
+    monkeypatch.setattr(serve, "jit_decode_step", spy)
+    gen = serve.main(ARCH + ["--batch", "1", "--prompt-len", "2",
+                             "--gen", "1"])
+    assert gen.shape == (1, 1)
+    assert len(calls) == 1
+    pspec, cspec = calls[0]
+    assert pspec is not None and cspec is not None, (
+        "the launcher must jit through jit_decode_step so params/cache "
+        "carry their NamedShardings (a bare jax.jit replicates them)")
+
+
+# ---------------------------------------------------------------------------
+# the continuous path end to end (tentpole smoke)
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_smoke_multi_tenant():
+    m = serve.main(ARCH + ["--continuous", "--arrival-rate", "6",
+                           "--tenants", "3", "--requests", "12",
+                           "--seed", "5"])
+    assert m["completed"] == m["submitted"] == 12
+    assert m["kv_transfer"]["plans"] >= 1
+    assert m["kv_transfer"]["bytes"] > 0
+    assert m["tokens_per_step"] > 0
+
+
+def test_continuous_is_deterministic():
+    args = ARCH + ["--continuous", "--requests", "10", "--seed", "7"]
+    a, b = serve.main(args), serve.main(args)
+    drop = ("tokens_per_s", "wall_s")
+    sa = {k: v for k, v in a.items() if k not in drop}
+    sb = {k: v for k, v in b.items() if k not in drop}
+    sa["kv_transfer"] = {k: v for k, v in a["kv_transfer"].items()
+                         if k != "wall_s"}
+    sb["kv_transfer"] = {k: v for k, v in b["kv_transfer"].items()
+                         if k != "wall_s"}
+    assert sa == sb

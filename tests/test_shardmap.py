@@ -98,3 +98,13 @@ def test_multi_pod_dryrun_cells():
 def test_elastic_remesh_restore():
     out = run_script("check_elastic.py")
     assert "ALL OK" in out
+
+
+@pytest.mark.slow
+def test_serve_device_paths():
+    """Continuous-batching serving on real shards: jit_decode_step's
+    cache NamedShardings actually land (the bare-jax.jit launcher bug),
+    KV-transfer plans bit-exact on shardmap + pallas transports, and a
+    full engine trace drained with transport="shardmap"."""
+    out = run_script("check_serve.py")
+    assert "ALL OK" in out
